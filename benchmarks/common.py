@@ -1,0 +1,50 @@
+"""Shared benchmark scaffolding.
+
+Every benchmark runs in FAST mode by default (CPU-sized models, minutes) and
+accepts ``--full`` for paper-scale settings; both print ``name,value,...``
+CSV rows so ``benchmarks/run.py`` can tee everything into bench_output.txt.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+
+def emit(row_name: str, **fields):
+    kv = ",".join(f"{k}={v}" for k, v in fields.items())
+    print(f"{row_name},{kv}", flush=True)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0
+
+
+def fast_fedtime_config(horizon: int = 24, lookback: int = 96):
+    from repro.configs import get_smoke_config
+    from repro.configs.base import FedTimeConfig
+    cfg = get_smoke_config("fedtime-llama2-7b")
+    return cfg.replace(fedtime=FedTimeConfig(
+        lookback=lookback, horizon=horizon, patch_len=8, patch_stride=4,
+        num_clients=8, num_clusters=2, clients_per_round=4, local_steps=4,
+        lora_rank=4, dpo_pairs=16))
+
+
+def forecast_data(dataset: str, lookback: int, horizon: int, *,
+                  timesteps: int = 2400, seed: int = 0):
+    from repro.data.timeseries import (DATASETS, generate, make_windows,
+                                       train_test_split)
+    series = generate(DATASETS[dataset], timesteps=timesteps, seed=seed)
+    tr, te = train_test_split(series)
+    xtr, ytr = make_windows(tr, lookback, horizon, stride=2)
+    xte, yte = make_windows(te, lookback, horizon, stride=8)
+    return (xtr, ytr), (xte, yte), series

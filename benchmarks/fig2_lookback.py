@@ -1,0 +1,55 @@
+"""Paper Figure 2: forecasting MSE vs look-back window length L."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, fast_fedtime_config
+
+
+def run(full: bool = False):
+    from repro.core import fedtime
+    from repro.data.federated import client_windows, partition_clients
+    from repro.data.timeseries import (DATASETS, generate, make_windows,
+                                       train_test_split)
+    from repro.train.fed_trainer import federated_fit
+    from repro.train.trainer import evaluate_forecaster
+
+    lookbacks = [24, 48, 96, 192, 336, 720] if full else [24, 48, 96]
+    T = 720 if full else 24
+    rounds = 8 if full else 2
+
+    series = generate(DATASETS["etth1"], timesteps=8000 if full else 3000)
+    tr, te = train_test_split(series)
+
+    for L in lookbacks:
+        # keep patching valid: stride divides (L - patch)
+        patch = 8 if L <= 96 else 16
+        stride = patch // 2
+        import dataclasses
+        cfg = fast_fedtime_config(horizon=T, lookback=L)
+        cfg = cfg.replace(fedtime=dataclasses.replace(
+            cfg.fedtime, patch_len=patch, patch_stride=stride))
+        clients = partition_clients(tr, 8, seed=0, channels_per_client=2)
+        cdata = client_windows(clients, L, T, max_windows=48)
+        res = federated_fit(cfg, cdata, rounds=rounds, batch_size=8)
+        params = res.params_for_cluster(0)
+        xte, yte = make_windows(te, L, T, stride=16)
+        Mc = cdata[0][0].shape[-1]
+        m = evaluate_forecaster(
+            lambda q, x: fedtime.forward(q, cfg, x), params,
+            xte[..., :Mc], yte[..., :Mc])
+        emit("fig2", lookback=L, horizon=T, method="fedtime",
+             mse=round(m["mse"], 4), mae=round(m["mae"], 4))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(ap.parse_args().full)
+
+
+if __name__ == "__main__":
+    main()

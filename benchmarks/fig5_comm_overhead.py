@@ -1,0 +1,85 @@
+"""Paper Figure 5: communication overhead (data volume MB, message count,
+modelled time) — FedTime vs full-model federation vs centralized shipping,
+on the ACN EV-charging setting (Caltech + JPL).
+
+Exact byte accounting from repro.core.comm; also reports the mesh-mapped
+collective bytes (DESIGN.md §3) so this figure and §Roofline's collective
+term are the same quantity measured two ways.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from benchmarks.common import emit, fast_fedtime_config
+
+
+def run(full: bool = False):
+    from repro.core import comm, fedtime
+    from repro.core.lora import (FAMILY_TARGETS, attach_lora, lora_tree,
+                                 quantize_base, tree_nbytes,
+                                 trainable_fraction)
+
+    # paper scale when --full: LLaMA-2-7B backbone, 555 devices
+    from repro.configs import get_config, get_smoke_config
+    cfg = get_config("fedtime-llama2-7b") if full else fast_fedtime_config()
+    ft = cfg.fedtime
+
+    if full:
+        # abstract tree only (7B would not fit this host) — byte accounting
+        # needs shapes, not values
+        from repro.launch.specs import param_shapes
+        params = param_shapes(cfg, fed=True)
+    else:
+        params = fedtime.init(cfg, jax.random.PRNGKey(0), num_channels=3)
+        params = attach_lora(params, jax.random.PRNGKey(1),
+                             rank=ft.lora_rank, alpha=ft.lora_alpha,
+                             targets=FAMILY_TARGETS["dense"])
+        if ft.qlora:
+            params = quantize_base(params, qblock=ft.qlora_block,
+                                   targets=FAMILY_TARGETS["dense"])
+
+    n_round = ft.clients_per_round
+    k = ft.num_clusters
+    rounds = 70 if full else 10          # paper: FedTime converges in ~70
+
+    ftime = comm.fedtime_round(params, clients_per_round=n_round,
+                               num_clusters=k)
+    ffull = comm.fed_full_round(params, clients_per_round=n_round,
+                                num_clusters=k)
+    cen = comm.centralized_epoch(num_samples=1_500_000 if full else 10_000,
+                                 lookback=ft.lookback, horizon=ft.horizon,
+                                 channels=54, num_clients=ft.num_clients)
+
+    for name, st, n in [("fedtime", ftime, rounds),
+                        ("fed_full_model", ffull, rounds),
+                        ("centralized_data", cen, 1)]:
+        emit("fig5", method=name,
+             mb_per_round=round(st.megabytes, 3),
+             total_mb=round(st.megabytes * n, 2),
+             messages=st.messages * n,
+             modelled_time_s=round(st.time_s * n, 2))
+
+    emit("fig5_detail",
+         lora_payload_mb=round(tree_nbytes(lora_tree(params)) / 1e6, 4),
+         full_model_mb=round(tree_nbytes(params) / 1e6, 2),
+         trainable_frac=round(trainable_fraction(params), 4))
+
+    for mesh_shape, name in [({"data": 16, "model": 16}, "single_pod"),
+                             ({"pod": 2, "data": 16, "model": 16},
+                              "multi_pod")]:
+        cb = comm.collective_bytes_per_round(params, mesh_shape)
+        emit("fig5_mesh", mesh=name,
+             **{f"{k}_mb": round(v / 1e6, 3) for k, v in cb.items()})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(ap.parse_args().full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Kernel micro-benchmarks: us_per_call of the jnp oracle paths on this
+host + derived TPU-projected arithmetic intensities for the Pallas kernels.
+
+(Wall-clock on CPU measures the oracle; the Pallas kernels themselves are
+dry-run artifacts — their projected VMEM working sets and FLOP/byte ratios
+are the 'derived' column.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(full: bool = False):
+    from repro.core.quant import nf4_quantize
+    from repro.kernels import ref
+
+    M, K, N, r, qb = (512, 1024, 1024, 8, 64) if full else (128, 256, 256, 8, 64)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    w = jax.random.normal(ks[0], (K, N)) * 0.02
+    wq, am = nf4_quantize(w, qb)
+    am2 = am.reshape(K, N // qb)
+    x = jax.random.normal(ks[1], (M, K))
+    a = jax.random.normal(ks[2], (K, r)) * 0.1
+    b = jax.random.normal(ks[3], (r, N)) * 0.1
+
+    f = jax.jit(lambda *args: ref.qlora_matmul_ref(*args, 2.0))
+    us = _time(f, x, wq, am2, a, b)
+    flops = 2 * M * K * N + 2 * M * K * r + 2 * M * r * N
+    hbm_bytes = M * K * 2 + K * N // 2 + (K * N // qb) * 4 + M * N * 2
+    emit("kernel", name="qlora_matmul", us_per_call=round(us, 1),
+         derived_flops=flops,
+         derived_arith_intensity=round(flops / hbm_bytes, 1),
+         vmem_tile_kib=round((128 * 128 + 128 * 256 // 2 + 128 * 256 * 4
+                              + 128 * 256 * 4) / 1024, 1))
+
+    B, H, S, D = (4, 8, 1024, 128) if full else (2, 4, 256, 64)
+    q = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D))
+    k2 = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(3), (B, H, S, D))
+    f = jax.jit(lambda *args: ref.flash_attention_ref(*args))
+    us = _time(f, q, k2, v)
+    flops = 4 * B * H * S * S * D
+    hbm = 4 * B * H * S * D * 2
+    emit("kernel", name="flash_attention", us_per_call=round(us, 1),
+         derived_flops=flops, derived_arith_intensity=round(flops / hbm, 1),
+         vmem_tile_kib=round((128 * D * 3 + 128 * 128) * 4 / 1024, 1))
+
+    shape = (64, 4096) if full else (32, 512)
+    x = jax.random.normal(jax.random.PRNGKey(4), shape)
+    s = jnp.ones((shape[-1],))
+    f = jax.jit(lambda *args: ref.rmsnorm_ref(*args))
+    us = _time(f, x, s)
+    n = shape[0] * shape[1]
+    emit("kernel", name="rmsnorm", us_per_call=round(us, 1),
+         derived_flops=3 * n, derived_arith_intensity=0.75,
+         vmem_tile_kib=round(256 * shape[-1] * 4 / 1024, 1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(ap.parse_args().full)
+
+
+if __name__ == "__main__":
+    main()

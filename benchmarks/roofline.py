@@ -1,0 +1,157 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+derives, per (arch × shape × mesh):
+
+  compute term    = FLOPs_per_device / peak_FLOPs            [s]
+  memory term     = bytes_per_device / HBM_bw                [s]
+  collective term = collective_bytes_per_device / ICI_bw     [s]
+
+plus MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs, and the dominant bottleneck.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                                     [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import SHAPES_BY_NAME, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def count_params(cfg) -> dict:
+    """Exact param counts from the abstract init tree (no allocation).
+    Returns {"total": N, "active": N_active} (MoE: routed experts scaled
+    by top_k/E)."""
+    from repro.launch.specs import param_shapes
+    tree = param_shapes(cfg)
+
+    def walk(t, path=()):
+        total = active = 0
+        if isinstance(t, dict):
+            for k, v in t.items():
+                a, b = walk(v, path + (k,))
+                total += a
+                active += b
+            return total, active
+        n = 1
+        for s in t.shape:
+            n *= s
+        frac = 1.0
+        if cfg.moe is not None and any(
+                p in ("gate_proj", "up_proj", "down_proj") for p in path):
+            frac = cfg.moe.top_k / cfg.moe.num_experts
+        return n, int(n * frac)
+
+    total, active = walk(tree)
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, shape) -> float:
+    """Architectural 'useful' FLOPs for the step (global, all devices)."""
+    n = count_params(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def load_results(directory: str):
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def analyze_one(r: dict) -> dict:
+    cfg = get_config(r["arch"])
+    shape = SHAPES_BY_NAME[r["shape"]]
+    flops_dev = r["flops_per_device"]
+    bytes_dev = r["bytes_accessed_per_device"]
+    coll_dev = r["collectives"]["total_bytes"]
+
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * r["num_devices"]
+    ratio = mf / hlo_global if hlo_global else 0.0
+    bound_time = max(terms.values())
+    frac_of_roofline = (t_compute / bound_time) if bound_time else 0.0
+
+    return {
+        **{k: r[k] for k in ("arch", "shape", "mesh", "step_kind",
+                             "num_devices", "compile_s")},
+        "fed": r.get("fed", False),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": ratio,
+        "compute_fraction_of_bound": frac_of_roofline,
+        "temp_gib": r["memory"]["temp_bytes"] / 2 ** 30,
+        "arg_gib": r["memory"]["argument_bytes"] / 2 ** 30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--csv", action="store_true", default=True)
+    args = ap.parse_args()
+
+    rows = [analyze_one(r) for r in load_results(args.dir)]
+    if not rows:
+        print("no dryrun results found; run repro.launch.dryrun first",
+              file=sys.stderr)
+        return
+
+    if args.markdown:
+        cols = ["arch", "shape", "mesh", "step_kind", "t_compute_s",
+                "t_memory_s", "t_collective_s", "dominant", "useful_ratio",
+                "temp_gib"]
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for r in rows:
+            vals = []
+            for c in cols:
+                v = r[c]
+                vals.append(f"{v:.3e}" if isinstance(v, float) else str(v))
+            print("| " + " | ".join(vals) + " |")
+    else:
+        for r in rows:
+            print(f"roofline,arch={r['arch']},shape={r['shape']},"
+                  f"mesh={r['mesh']},fed={r['fed']},"
+                  f"compute_s={r['t_compute_s']:.4e},"
+                  f"memory_s={r['t_memory_s']:.4e},"
+                  f"collective_s={r['t_collective_s']:.4e},"
+                  f"dominant={r['dominant']},"
+                  f"useful_ratio={r['useful_ratio']:.3f},"
+                  f"temp_gib={r['temp_gib']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

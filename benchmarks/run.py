@@ -1,0 +1,70 @@
+"""Benchmark runner — one harness per paper table/figure (+ kernels +
+roofline).  Prints ``name,key=value,...`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # fast (CPU-minutes)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
+  PYTHONPATH=src python -m benchmarks.run --only table2,fig5
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset (table2,table3,fig2,fig3,"
+                         "fig5,fig6,kernels,roofline)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_lookback, fig3_convergence,
+                            fig5_comm_overhead, fig6_ablation, kernels_bench,
+                            table2_forecasting, table3_federated)
+
+    suites = {
+        "table2": table2_forecasting.run,      # Table 2: MSE/MAE grid
+        "table3": table3_federated.run,        # Table 3: federated compare
+        "fig2": fig2_lookback.run,             # Fig 2: look-back sweep
+        "fig3": fig3_convergence.run,          # Fig 3: convergence
+        "fig5": fig5_comm_overhead.run,        # Fig 5: comm overhead
+        "fig6": fig6_ablation.run,             # Fig 6: ablation
+        "kernels": kernels_bench.run,          # kernel microbench
+    }
+    only = set(filter(None, args.only.split(",")))
+
+    failures = 0
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(full=args.full)
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+
+    if not only or "roofline" in only:
+        print("# === roofline (from dry-run artifacts) ===", flush=True)
+        try:
+            import benchmarks.roofline as roofline
+            sys.argv = ["roofline"]
+            roofline.main()
+        except Exception as e:
+            print(f"# roofline skipped: {e}", flush=True)
+
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Serve any assigned architecture: prefill a batch of prompts + batched
+decode with the production serve_step (the one the multi-pod dry-run lowers).
+
+  PYTHONPATH=src python examples/serve_assigned_arch.py --arch zamba2-2.7b
+  PYTHONPATH=src python examples/serve_assigned_arch.py --arch xlstm-350m
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve  # noqa: E402
+
+
+if __name__ == "__main__":
+    serve.main()

@@ -1,0 +1,64 @@
+"""End-to-end LM training driver at ~100M scale.
+
+Trains a SmolLM-family dense decoder (~110M params at the default width)
+with the production train_step on Markov-structured synthetic tokens.
+On a TPU slice: drop --layers/--width overrides to train the full config
+with the same code path. On this CPU container the default is a short run
+that still demonstrates loss descent at >100M params.
+
+  PYTHONPATH=src python examples/train_lm_100m.py --steps 10
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data.tokens import lm_batches, markov_tokens
+from repro.launch.steps import make_train_step
+from repro.models.registry import get_model
+from repro.optim.adamw import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=6)
+    args = ap.parse_args()
+
+    # smollm-360m config, reduced depth => ~100M params (embed-dominated)
+    cfg = get_config("smollm-360m").replace(
+        name="smollm-100m", num_layers=args.layers,
+        param_dtype="float32", compute_dtype="float32")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params "
+          f"({cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size})")
+
+    toks = markov_tokens(300_000, cfg.vocab_size, seed=0)
+    it = lm_batches(toks, args.batch, args.seq + 1, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, lr=3e-4), donate_argnums=(0, 1))
+    opt = adamw_init(params)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        b = next(it)
+        batch = {"tokens": jnp.asarray(b["tokens"][:, :args.seq]),
+                 "labels": jnp.asarray(b["labels"][:, :args.seq])}
+        params, opt, loss = step_fn(params, opt, batch,
+                                    jnp.asarray(i, jnp.int32))
+        print(f"step {i + 1}/{args.steps} loss={float(loss):.4f} "
+              f"({(i + 1) * args.batch * args.seq / (time.time() - t0):.0f}"
+              f" tok/s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""DLinear baseline (Zeng et al., AAAI 2023): series decomposition
+(moving-average trend + remainder) with per-component linear maps L -> T,
+channel-independent."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(key, lookback: int, horizon: int):
+    k1, k2 = jax.random.split(key)
+    s = lookback ** -0.5
+    return {
+        "w_trend": (jax.random.normal(k1, (lookback, horizon)) * s
+                    ).astype(jnp.float32),
+        "w_season": (jax.random.normal(k2, (lookback, horizon)) * s
+                     ).astype(jnp.float32),
+    }
+
+
+def _moving_avg(x, k: int = 25):
+    """x: (B, L, M) -> trend via centered moving average (edge-padded)."""
+    pad_l, pad_r = (k - 1) // 2, k // 2
+    xp = jnp.concatenate([jnp.repeat(x[:, :1], pad_l, 1), x,
+                          jnp.repeat(x[:, -1:], pad_r, 1)], axis=1)
+    c = jnp.cumsum(xp, axis=1)
+    zero = jnp.zeros_like(c[:, :1])
+    c = jnp.concatenate([zero, c], axis=1)
+    return (c[:, k:] - c[:, :-k]) / k
+
+
+def forward(params, x):
+    """x: (B, L, M) -> (B, T, M)."""
+    trend = _moving_avg(x)
+    season = x - trend
+    yt = jnp.einsum("blm,lt->btm", trend, params["w_trend"])
+    ys = jnp.einsum("blm,lt->btm", season, params["w_season"])
+    return yt + ys
+
+
+def loss(params, batch):
+    pred = forward(params, batch["x"])
+    return jnp.mean(jnp.square(pred - batch["y"]))

@@ -1,0 +1,73 @@
+"""FSLSTM baseline — federated stacked LSTM (Abdel-Sater & Hamza 2021,
+paper reference [1]).  Two stacked LSTM layers over the multivariate
+series, last hidden state -> linear head to the full horizon.  Federation
+ships FULL weights (no PEFT) — this is what makes it the paper's
+communication-overhead strawman."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _init_lstm_layer(key, d_in: int, d_hidden: int):
+    k1, k2 = jax.random.split(key)
+    s_in, s_h = d_in ** -0.5, d_hidden ** -0.5
+    return {
+        "wx": (jax.random.normal(k1, (d_in, 4 * d_hidden)) * s_in
+               ).astype(jnp.float32),
+        "wh": (jax.random.normal(k2, (d_hidden, 4 * d_hidden)) * s_h
+               ).astype(jnp.float32),
+        "b": jnp.zeros((4 * d_hidden,), jnp.float32)
+             .at[d_hidden:2 * d_hidden].set(1.0),      # forget-gate bias 1
+    }
+
+
+def init(key, *, channels: int, horizon: int, d_hidden: int = 128,
+         layers: int = 2):
+    ks = jax.random.split(key, layers + 1)
+    stack = [_init_lstm_layer(ks[i], channels if i == 0 else d_hidden,
+                              d_hidden) for i in range(layers)]
+    s = d_hidden ** -0.5
+    return {
+        "layers": stack,
+        "head": (jax.random.normal(ks[-1], (d_hidden, horizon * channels))
+                 * s).astype(jnp.float32),
+    }
+
+
+def _lstm_scan(lp, x):
+    """x: (B, L, d_in) -> hidden sequence (B, L, dh)."""
+    B, L, _ = x.shape
+    dh = lp["wh"].shape[0]
+    xw = x @ lp["wx"] + lp["b"][None, None, :]
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt + h @ lp["wh"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((B, dh)), jnp.zeros((B, dh))
+    _, hs = jax.lax.scan(step, h0, xw.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def forward(params, x):
+    """x: (B, L, M) -> (B, T, M)."""
+    B, L, M = x.shape
+    mu = x.mean(1, keepdims=True)
+    sd = x.std(1, keepdims=True) + 1e-5
+    h = (x - mu) / sd
+    for lp in params["layers"]:
+        h = _lstm_scan(lp, h)
+    T = params["head"].shape[1] // M          # horizon from head shape
+    y = (h[:, -1, :] @ params["head"]).reshape(B, T, M)
+    return y * sd + mu
+
+
+def loss(params, batch):
+    pred = forward(params, batch["x"])
+    return jnp.mean(jnp.square(pred - batch["y"]))

@@ -1,0 +1,75 @@
+"""PatchTST baseline (Nie et al., ICLR 2023) and its federated variant
+Fed-PatchTST (paper §4.2 "For the sake of federated comparison...").
+
+RevIN + channel independence + patching + bidirectional transformer
+encoder + flatten head. Reuses the FedTime front-end with a small dense
+encoder config and full (non-causal) attention — the architectural deltas
+vs FedTime are exactly the paper's: no LLM backbone, no LoRA (federation
+ships full weights), no DPO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedTimeConfig, ModelConfig
+from repro.core.patching import (channel_merge, channel_split,
+                                 init_patch_embed, make_patches, num_patches,
+                                 patch_embed)
+from repro.core.revin import init_revin, revin_denorm, revin_norm
+from repro.models.layers.linear import dense, init_dense
+from repro.models.transformer import _init_block, forward_hidden
+
+
+def make_config(*, lookback: int = 512, horizon: int = 96,
+                d_model: int = 128, num_layers: int = 3,
+                num_heads: int = 16, d_ff: int = 256,
+                patch_len: int = 16, stride: int = 8) -> ModelConfig:
+    """PatchTST/64-flavored encoder config."""
+    return ModelConfig(
+        name="patchtst", family="dense", num_layers=num_layers,
+        d_model=d_model, num_heads=num_heads, num_kv_heads=num_heads,
+        d_ff=d_ff, vocab_size=1, activation="gelu",
+        param_dtype="float32", compute_dtype="float32",
+        fedtime=FedTimeConfig(lookback=lookback, horizon=horizon,
+                              patch_len=patch_len, patch_stride=stride,
+                              qlora=False),
+        source="arXiv:2211.14730 (PatchTST)")
+
+
+def init(cfg: ModelConfig, key, *, num_channels: int = 1):
+    ft = cfg.fedtime
+    N = num_patches(ft.lookback, ft.patch_len, ft.patch_stride)
+    kp, kl, kh = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "patch": init_patch_embed(kp, ft.patch_len, N, cfg.d_model),
+        "layers": jax.vmap(lambda k: _init_block(k, cfg, jnp.float32))(keys),
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+        "head": init_dense(kh, N * cfg.d_model, ft.horizon, jnp.float32),
+        "revin": init_revin(num_channels),
+    }
+
+
+def forward(params, cfg: ModelConfig, x):
+    """x: (B, L, M) -> (B, T, M). Bidirectional encoder (PatchTST)."""
+    ft = cfg.fedtime
+    B, L, M = x.shape
+    xn, stats = revin_norm(params["revin"], x.astype(jnp.float32))
+    u = channel_split(xn)
+    p = make_patches(u, ft.patch_len, ft.patch_stride)
+    h = patch_embed(params["patch"], p)
+    N = h.shape[1]
+    h = forward_hidden({"layers": params["layers"],
+                        "final_norm": params["final_norm"]}, cfg, h,
+                       positions=jnp.arange(N, dtype=jnp.int32),
+                       remat=False, kind="full")
+    y = dense(params["head"], h.reshape(B * M, N * cfg.d_model))
+    y = channel_merge(y, B, M)
+    return revin_denorm(params["revin"], y, stats)
+
+
+def loss(params, cfg: ModelConfig, batch):
+    pred = forward(params, cfg, batch["x"])
+    return jnp.mean(jnp.square(pred - batch["y"]))

@@ -1,0 +1,26 @@
+from repro.configs.base import (
+    EncDecConfig,
+    FedTimeConfig,
+    HybridConfig,
+    INPUT_SHAPES,
+    InputShape,
+    MoEConfig,
+    ModelConfig,
+    SHAPES_BY_NAME,
+    SSMConfig,
+    VLMConfig,
+    XLSTMConfig,
+)
+from repro.configs.registry import (
+    ALL_ARCHS,
+    ASSIGNED_ARCHS,
+    get_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "EncDecConfig", "FedTimeConfig", "HybridConfig", "INPUT_SHAPES",
+    "InputShape", "MoEConfig", "ModelConfig", "SHAPES_BY_NAME", "SSMConfig",
+    "VLMConfig", "XLSTMConfig", "ALL_ARCHS", "ASSIGNED_ARCHS", "get_config",
+    "get_smoke_config",
+]

@@ -1,0 +1,55 @@
+"""The paper's own backbone: LLaMA-2-7B used as the FedTime LLM encoder.
+[arXiv:2302.13971 / Touvron et al. 2023; paper §3.2 "LLM Encoder"]
+
+This is the 11th config — not from the assigned pool, but the architecture
+the paper itself federates. Used by the FedTime benchmarks and the
+paper-representative dry-run/hillclimb pair.
+"""
+
+from repro.configs.base import ModelConfig, FedTimeConfig
+
+CONFIG = ModelConfig(
+    name="fedtime-llama2-7b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,                    # llama-2 7B uses MHA
+    head_dim=128,
+    d_ff=11_008,
+    vocab_size=32_000,
+    rope_theta=10_000.0,
+    activation="swiglu",
+    decode_sliding_window=4096,
+    fedtime=FedTimeConfig(
+        lookback=512,
+        horizon=720,
+        patch_len=16,
+        patch_stride=8,
+        num_clients=555,
+        num_clusters=8,
+        lora_rank=8,
+        qlora=True,
+    ),
+    source="arXiv:2307.09288 (LLaMA-2 7B); paper §3.2",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        name="fedtime-llama2-7b-smoke",
+        num_layers=2,
+        d_model=128,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        fedtime=FedTimeConfig(
+            lookback=96, horizon=24, patch_len=8, patch_stride=4,
+            num_clients=8, num_clusters=2, clients_per_round=4,
+            local_steps=2, lora_rank=4, dpo_pairs=16,
+        ),
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

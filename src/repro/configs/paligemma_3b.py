@@ -1,0 +1,49 @@
+"""paligemma-3b — VLM: SigLIP (stub) + gemma decoder backbone.
+[arXiv:2407.07726]
+
+Vision tower carve-out: ``input_specs()`` provides precomputed SigLIP patch
+embeddings; we implement the projector + gemma-style prefix-LM decoder.
+"""
+
+from repro.configs.base import ModelConfig, VLMConfig, FedTimeConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,                     # MQA
+    head_dim=256,                       # gemma-2b head_dim
+    d_ff=16_384,
+    vocab_size=257_216,
+    rope_theta=10_000.0,
+    activation="geglu",
+    tie_embeddings=True,
+    embedding_multiplier=45.254833995939045,  # sqrt(2048)
+    vlm=VLMConfig(
+        num_image_tokens=256,
+        vision_embed_dim=1152,
+        prefix_lm=True,
+    ),
+    decode_sliding_window=4096,
+    fedtime=FedTimeConfig(),
+    source="arXiv:2407.07726 (PaliGemma)",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        name="paligemma-3b-smoke",
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=1,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        embedding_multiplier=16.0,
+        vlm=VLMConfig(num_image_tokens=16, vision_embed_dim=96, prefix_lm=True),
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

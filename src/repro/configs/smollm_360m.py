@@ -1,0 +1,36 @@
+"""smollm-360m — llama-arch small dense decoder. [hf:HuggingFaceTB/SmolLM-135M card family]"""
+
+from repro.configs.base import ModelConfig, FedTimeConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    num_layers=32,
+    d_model=960,
+    num_heads=15,
+    num_kv_heads=5,
+    head_dim=64,                        # 960 / 15
+    d_ff=2560,
+    vocab_size=49_152,
+    rope_theta=10_000.0,
+    activation="swiglu",
+    tie_embeddings=True,
+    decode_sliding_window=4096,
+    fedtime=FedTimeConfig(),
+    source="hf:HuggingFaceTB/SmolLM-360M",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG.replace(
+        name="smollm-360m-smoke",
+        num_layers=2,
+        d_model=192,
+        num_heads=3,
+        num_kv_heads=1,
+        head_dim=64,
+        d_ff=384,
+        vocab_size=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,9 @@
+"""The paper's primary contribution: FedTime's federated LLM fine-tuning
+system — clustering (C3), LoRA/QLoRA (C2), the TS model (C1), DPO (C4),
+and communication accounting (C5)."""
+
+from repro.core import (client, clustering, comm, dpo, fedtime, lora,
+                        patching, quant, revin, server)
+
+__all__ = ["client", "clustering", "comm", "dpo", "fedtime", "lora",
+           "patching", "quant", "revin", "server"]

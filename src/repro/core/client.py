@@ -1,0 +1,50 @@
+"""Client-side local training (paper Algorithm 1, UpdateDevice).
+
+A client receives the global adapter tree, merges it into its frozen
+(optionally NF4-quantized) base, runs ``local_steps`` of Adam on the
+adapter leaves only, and returns the updated adapters — the only thing
+that ever leaves the device (C2 + C3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import lora_tree, merge_lora
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+@functools.partial(jax.jit, static_argnames=("loss_fn", "steps", "lr"))
+def local_update(loss_fn, base_params, adapters, batches, *, steps: int,
+                 lr: float = 1e-3):
+    """Run ``steps`` local steps.
+
+    loss_fn: (params, batch) -> scalar, closed over cfg.
+    batches: pytree whose leaves have leading dim >= steps (batch per step).
+    Returns (new_adapters, mean loss).
+    """
+
+    def adapter_loss(ad, batch):
+        return loss_fn(merge_lora(base_params, ad), batch)
+
+    grad_fn = jax.value_and_grad(adapter_loss)
+    opt0 = adamw_init(adapters)
+
+    def step(carry, i):
+        ad, opt = carry
+        batch = jax.tree.map(lambda b: b[i % b.shape[0]], batches)
+        l, g = grad_fn(ad, batch)
+        ad, opt = adamw_update(ad, g, opt, i + 1, lr=lr)
+        return (ad, opt), l
+
+    (ad, _), losses = jax.lax.scan(step, (adapters, opt0),
+                                   jnp.arange(steps))
+    return ad, losses.mean()
+
+
+def client_payload(params) -> dict:
+    """What the client transmits: adapters only."""
+    return lora_tree(params)

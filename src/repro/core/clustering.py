@@ -1,0 +1,76 @@
+"""K-means clustering of edge devices (paper §3.1: pre-learning step).
+
+Clients are embedded by their local-data statistics (mean/std/trend of the
+load curve, dataset size, and a device-capability proxy) and clustered so
+each cluster trains its own global model — the paper's mechanism for
+reducing biased predictions and localizing aggregation (C3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def client_features(series_list, capabilities=None) -> jnp.ndarray:
+    """series_list: list of (L_s, M) arrays (heterogeneous lengths allowed).
+    Returns (S, F) feature matrix, standardized per feature."""
+    feats = []
+    for i, s in enumerate(series_list):
+        s = jnp.asarray(s, jnp.float32).reshape(s.shape[0], -1)
+        L = s.shape[0]
+        t = jnp.arange(L, dtype=jnp.float32)
+        tc = t - t.mean()
+        trend = (tc[:, None] * (s - s.mean(0))).sum(0) / \
+            jnp.maximum((tc ** 2).sum(), 1e-9)
+        cap = 1.0 if capabilities is None else float(capabilities[i])
+        feats.append(jnp.concatenate([
+            s.mean(0).mean()[None], s.std(0).mean()[None],
+            trend.mean()[None], jnp.asarray([jnp.log1p(L)]),
+            jnp.asarray([cap])]))
+    X = jnp.stack(feats)
+    mu, sd = X.mean(0), X.std(0) + 1e-9
+    return (X - mu) / sd
+
+
+def kmeans(X: jnp.ndarray, k: int, *, iters: int = 50, key=None):
+    """Lloyd's algorithm in pure JAX. Returns (assignments (S,), centers
+    (k, F), inertia)."""
+    S, F = X.shape
+    k = min(k, S)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    # k-means++ style: greedy farthest-point init (deterministic given key)
+    first = jax.random.randint(key, (), 0, S)
+    centers0 = jnp.zeros((k, F)).at[0].set(X[first])
+
+    def init_step(i, centers):
+        d = jnp.min(jnp.sum((X[:, None, :] - centers[None]) ** 2, -1)
+                    + jnp.where(jnp.arange(k)[None] >= i, jnp.inf, 0.0),
+                    axis=1)
+        nxt = jnp.argmax(d)
+        return centers.at[i].set(X[nxt])
+
+    centers = jax.lax.fori_loop(1, k, init_step, centers0)
+
+    def lloyd(_, carry):
+        centers, _ = carry
+        d = jnp.sum((X[:, None, :] - centers[None]) ** 2, -1)   # (S,k)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)   # (S,k)
+        counts = onehot.sum(0)                                   # (k,)
+        sums = onehot.T @ X                                      # (k,F)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts[:, None], 1), centers)
+        return new, assign
+
+    centers, assign = jax.lax.fori_loop(
+        0, iters, lloyd, (centers, jnp.zeros((S,), jnp.int32)))
+    d = jnp.sum((X - centers[assign]) ** 2, -1)
+    return assign, centers, d.sum()
+
+
+def cluster_clients(series_list, k: int, *, capabilities=None, key=None):
+    X = client_features(series_list, capabilities)
+    assign, centers, inertia = kmeans(X, k, key=key)
+    return assign, centers, inertia

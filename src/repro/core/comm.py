@@ -1,0 +1,92 @@
+"""Communication-overhead accounting (paper C5 / Figure 5).
+
+Counts exact bytes and messages per federated round and models wall time
+from configurable link characteristics.  Three strategies are compared,
+matching the paper's Figure 5 baselines:
+
+  * fedtime      — LoRA adapters only (the paper's method)
+  * fed_full     — full model weights each way (naive FedAvg)
+  * centralized  — raw windowed data shipped to the server once per epoch
+
+Mesh mapping (DESIGN.md §3): on the dry-run mesh, intra-cluster aggregation
+is a psum over the ``data`` axis and cross-site aggregation crosses ``pod``;
+``collective_bytes_per_round`` reports what each axis carries so the §Roofline
+collective term and the paper's comm metric are the same quantity measured
+two ways.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.lora import lora_tree, tree_nbytes
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Edge federation link characteristics (paper's EV-charging setting)."""
+    uplink_bps: float = 100e6          # 100 Mbit/s edge uplink
+    downlink_bps: float = 300e6
+    latency_s: float = 0.030           # per message
+    # dry-run mesh analogue (v5e ICI), for the roofline cross-check
+    ici_bps: float = 50e9 * 8
+
+
+@dataclass
+class RoundStats:
+    bytes_up: int
+    bytes_down: int
+    messages: int
+    time_s: float
+
+    @property
+    def megabytes(self) -> float:
+        return (self.bytes_up + self.bytes_down) / 1e6
+
+
+def fedtime_round(params, *, clients_per_round: int, num_clusters: int,
+                  link: LinkModel = LinkModel()) -> RoundStats:
+    """LoRA-only payload: each participating client uploads its adapter
+    delta; each cluster broadcasts one aggregated adapter back."""
+    payload = tree_nbytes(lora_tree(params))
+    up = payload * clients_per_round
+    down = payload * clients_per_round        # broadcast back to participants
+    msgs = 2 * clients_per_round + num_clusters   # +cluster->server merges
+    t = (up / link.uplink_bps * 8 + down / link.downlink_bps * 8 +
+         msgs * link.latency_s)
+    return RoundStats(up, down, msgs, t)
+
+
+def fed_full_round(params, *, clients_per_round: int, num_clusters: int,
+                   link: LinkModel = LinkModel()) -> RoundStats:
+    payload = tree_nbytes(params)
+    up = payload * clients_per_round
+    down = payload * clients_per_round
+    msgs = 2 * clients_per_round + num_clusters
+    t = (up / link.uplink_bps * 8 + down / link.downlink_bps * 8 +
+         msgs * link.latency_s)
+    return RoundStats(up, down, msgs, t)
+
+
+def centralized_epoch(num_samples: int, lookback: int, horizon: int,
+                      channels: int, *, num_clients: int,
+                      link: LinkModel = LinkModel()) -> RoundStats:
+    """Raw data shipped to the server (the centralized baseline's cost)."""
+    sample_bytes = (lookback + horizon) * channels * 4
+    up = num_samples * sample_bytes
+    msgs = num_clients
+    t = up / link.uplink_bps * 8 + msgs * link.latency_s
+    return RoundStats(up, 0, msgs, t)
+
+
+def collective_bytes_per_round(params, mesh_shape: dict) -> dict:
+    """Bytes crossing each mesh axis for one aggregation round when the
+    federation is mapped onto the dry-run mesh (clients -> data axis,
+    sites -> pod axis). An all-reduce of payload P over an n-way axis moves
+    2·P·(n-1)/n per device (ring)."""
+    payload = tree_nbytes(lora_tree(params))
+    out = {}
+    for axis in ("data", "pod"):
+        n = mesh_shape.get(axis, 1)
+        out[axis] = 0 if n <= 1 else int(2 * payload * (n - 1) / n)
+    return out

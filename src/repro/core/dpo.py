@@ -1,0 +1,48 @@
+"""Direct Preference Optimization for time-series alignment (paper C4).
+
+The paper applies DPO post-SFT "to capture any change of variables,
+ensuring a more effective adaptation to the intricacies of time series
+forecasting" using 10K comparison pairs.  Adaptation (DESIGN.md §6): a
+preference pair is (history x, preferred forecast y_w, dispreferred
+forecast y_l); the policy "log-likelihood" of a forecast is the Gaussian
+log-density -||y - f(x)||²/2, which turns DPO's logit into a difference of
+squared errors — the regression analogue of token log-probs.
+
+    L = -log σ( β [ (log π(y_w|x) - log π_ref(y_w|x))
+                  - (log π(y_l|x) - log π_ref(y_l|x)) ] )
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fedtime
+
+
+def _logp(pred, y):
+    """Per-sample Gaussian log-density (up to a constant)."""
+    d = (pred - y).astype(jnp.float32)
+    return -0.5 * jnp.sum(jnp.square(d), axis=(1, 2))        # (B,)
+
+
+def dpo_loss(params, ref_params, cfg, batch, *, beta: float = 0.1,
+             phase: str = "sft"):
+    """batch: {"x": (B,L,M), "y_w": (B,T,M), "y_l": (B,T,M)}."""
+    pred = fedtime.forward(params, cfg, batch["x"], phase=phase)
+    ref_pred = fedtime.forward(ref_params, cfg, batch["x"], phase=phase)
+    ref_pred = jax.lax.stop_gradient(ref_pred)
+    logit = ((_logp(pred, batch["y_w"]) - _logp(ref_pred, batch["y_w"])) -
+             (_logp(pred, batch["y_l"]) - _logp(ref_pred, batch["y_l"])))
+    return -jnp.mean(jax.nn.log_sigmoid(beta * logit))
+
+
+def make_preference_pairs(key, x, y, *, noise_lo=0.05, noise_hi=0.5):
+    """Synthesize (y_w, y_l) from ground truth: y_w = light perturbation,
+    y_l = heavy perturbation — mirrors 'better vs worse forecast' feedback
+    (UltraFeedback substitute, DESIGN.md §6)."""
+    k1, k2 = jax.random.split(key)
+    scale = jnp.std(y, axis=1, keepdims=True) + 1e-6
+    y_w = y + noise_lo * scale * jax.random.normal(k1, y.shape)
+    y_l = y + noise_hi * scale * jax.random.normal(k2, y.shape)
+    return {"x": x, "y_w": y_w, "y_l": y_l}

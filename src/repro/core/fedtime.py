@@ -1,0 +1,75 @@
+"""The FedTime forecasting model (paper C1): RevIN/instance-norm ->
+channel independence -> patching -> patch+position embedding -> LLM
+backbone (LLaMA-style decoder blocks) -> flatten -> linear forecast head ->
+de-normalization.
+
+The backbone reuses the dense-transformer block stack, so C2 (LoRA/QLoRA via
+``repro.core.lora``) and C3 (federated aggregation of adapters) apply to this
+model exactly as to the assigned LM architectures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.patching import (channel_merge, channel_split,
+                                 init_patch_embed, make_patches, num_patches,
+                                 patch_embed)
+from repro.core.revin import init_revin, instance_norm, revin_denorm, revin_norm
+from repro.models.layers.linear import dense, init_dense
+from repro.models.losses import mse
+from repro.models.transformer import _init_block, forward_hidden
+
+
+def init(cfg: ModelConfig, key, *, num_channels: int = 1) -> dict:
+    ft = cfg.fedtime
+    dtype = jnp.dtype(cfg.param_dtype)
+    N = num_patches(ft.lookback, ft.patch_len, ft.patch_stride)
+    kp, kl, kh = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.num_layers)
+    return {
+        "patch": init_patch_embed(kp, ft.patch_len, N, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: _init_block(k, cfg, dtype))(keys),
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+        "head": init_dense(kh, N * cfg.d_model, ft.horizon, dtype),
+        "revin": init_revin(num_channels),
+    }
+
+
+def forward(params, cfg: ModelConfig, x: jnp.ndarray, *,
+            phase: str = "forecast", remat: bool = True) -> jnp.ndarray:
+    """x: (B, L, M) history -> (B, T, M) forecast.
+
+    phase='sft'      : plain instance norm (paper phase 1)
+    phase='forecast' : RevIN with learnable affine (paper phase 2)
+    """
+    ft = cfg.fedtime
+    B, L, M = x.shape
+    x = x.astype(jnp.float32)
+    if phase == "sft":
+        xn, stats = instance_norm(x)
+    else:
+        xn, stats = revin_norm(params["revin"], x)
+
+    u = channel_split(xn.astype(jnp.dtype(cfg.compute_dtype)))   # (B*M, L)
+    p = make_patches(u, ft.patch_len, ft.patch_stride)           # (B*M, N, P)
+    h = patch_embed(params["patch"], p)                          # (B*M, N, D)
+    N = h.shape[1]
+    positions = jnp.arange(N, dtype=jnp.int32)
+    h = forward_hidden({"layers": params["layers"],
+                        "final_norm": params["final_norm"]},
+                       cfg, h, positions=positions, remat=remat)
+    flat = h.reshape(B * M, N * cfg.d_model)
+    y = dense(params["head"], flat)                              # (B*M, T)
+    y = channel_merge(y.astype(jnp.float32), B, M)               # (B, T, M)
+    if phase == "sft":
+        return y * stats["sd"] + stats["mu"]
+    return revin_denorm(params["revin"], y, stats)
+
+
+def loss(params, cfg: ModelConfig, batch, *, phase: str = "forecast"):
+    """Paper Eq. (5): MSE over channels and horizon."""
+    pred = forward(params, cfg, batch["x"], phase=phase)
+    return mse(pred, batch["y"])

@@ -1,0 +1,193 @@
+"""LoRA / QLoRA plumbing over arbitrary parameter pytrees (paper C2).
+
+A "linear site" is any sub-dict carrying a weight leaf ``w`` whose path tail
+matches the family's target set.  ``attach_lora`` adds (lora_a, lora_b,
+lora_scale) in place; ``quantize_base`` replaces ``w`` by NF4 codes;
+``lora_tree``/``merge_lora`` extract and re-insert only the adapter leaves —
+the federated payload (what crosses the network each round, paper C3/C5).
+
+Handles stacked (vmap-initialized) layers transparently: a weight of shape
+(L, in, out) gets adapters (L, in, r) / (L, r, out).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import nf4_quantize
+
+# per-family LoRA placement (DESIGN.md §4)
+DEFAULT_TARGETS = ("wq", "wk", "wv", "wo")
+FAMILY_TARGETS = {
+    "dense": DEFAULT_TARGETS,
+    "moe": DEFAULT_TARGETS + ("router",),
+    "vlm": DEFAULT_TARGETS + ("vis_proj",),
+    "encdec": DEFAULT_TARGETS,
+    "ssm": DEFAULT_TARGETS + ("up", "down"),          # xLSTM block projections
+    "hybrid": DEFAULT_TARGETS + ("in_proj", "out_proj"),
+}
+
+# sites that stay un-quantized even under QLoRA (small / numerically touchy)
+NO_QUANT = ("router", "embed", "lm_head", "vis_proj", "frame_proj")
+
+
+def _walk(tree, fn, path=()):
+    """Depth-first walk; fn(path, subdict) may mutate dict nodes in place."""
+    if isinstance(tree, dict):
+        fn(path, tree)
+        for k, v in list(tree.items()):
+            _walk(v, fn, path + (k,))
+
+
+def _is_linear_site(node) -> bool:
+    return isinstance(node, dict) and ("w" in node or "w_nf4" in node) and \
+        not isinstance(node.get("w", node.get("w_nf4")), dict)
+
+
+def _matches(path: Tuple[str, ...], targets: Iterable[str]) -> bool:
+    return len(path) > 0 and path[-1] in targets
+
+
+def attach_lora(params, key, *, rank: int, alpha: float,
+                targets: Iterable[str] = DEFAULT_TARGETS):
+    """Returns a copy of ``params`` with adapters attached to target sites."""
+    params = jax.tree.map(lambda x: x, params)  # shallow-ish copy of leaves
+    counter = [0]
+    keys = {}
+
+    def collect(path, node):
+        if _is_linear_site(node) and _matches(path, targets):
+            keys[path] = counter[0]
+            counter[0] += 1
+
+    _walk(params, collect)
+    subkeys = jax.random.split(key, max(counter[0], 1))
+
+    def attach(path, node):
+        if not (_is_linear_site(node) and _matches(path, targets)):
+            return
+        w = node.get("w")
+        if w is None:
+            return
+        *lead, din, dout = w.shape
+        k = subkeys[keys[path]]
+        # LoRA init: A ~ N(0, 1/r), B = 0 (adapter starts as identity delta)
+        node["lora_a"] = (jax.random.normal(k, (*lead, din, rank)) *
+                          (rank ** -0.5)).astype(jnp.float32)
+        node["lora_b"] = jnp.zeros((*lead, rank, dout), jnp.float32)
+        # shaped (*lead,) so stacked-layer trees stay scannable
+        node["lora_scale"] = jnp.full(tuple(lead), alpha / rank, jnp.float32)
+
+    _walk(params, attach)
+    return params
+
+
+def quantize_base(params, *, qblock: int = 64,
+                  targets: Iterable[str] = DEFAULT_TARGETS):
+    """NF4-quantize the frozen base weights at LoRA sites (QLoRA)."""
+    params = jax.tree.map(lambda x: x, params)
+
+    def quant(path, node):
+        if not (_is_linear_site(node) and _matches(path, targets)):
+            return
+        if any(nq in path for nq in NO_QUANT):
+            return
+        w = node.pop("w", None)
+        if w is None:
+            return
+        n = 1
+        for s in w.shape[-2:]:
+            n *= s
+        qb = qblock if n % qblock == 0 else _best_block(n, qblock)
+        node["w_nf4"], node["absmax"] = nf4_quantize(w, qb)
+
+    _walk(params, quant)
+    return params
+
+
+def _best_block(n: int, target: int) -> int:
+    for qb in range(target, 1, -1):
+        if n % qb == 0:
+            return qb
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Adapter extraction / merging — the federated payload
+# ---------------------------------------------------------------------------
+
+def lora_tree(params):
+    """Subtree containing ONLY adapter leaves (lora_a / lora_b)."""
+    if isinstance(params, dict):
+        out = {}
+        for k, v in params.items():
+            if k in ("lora_a", "lora_b"):
+                out[k] = v
+            elif isinstance(v, dict):
+                sub = lora_tree(v)
+                if sub:
+                    out[k] = sub
+        return out
+    return {}
+
+
+def merge_lora(params, adapters):
+    """Re-insert adapter leaves into a full parameter tree (returns copy)."""
+    if not isinstance(params, dict):
+        return params
+    out = {}
+    for k, v in params.items():
+        if k in ("lora_a", "lora_b") and isinstance(adapters, dict) \
+                and k in adapters:
+            out[k] = adapters[k]
+        elif isinstance(v, dict):
+            out[k] = merge_lora(v, adapters.get(k, {})
+                                if isinstance(adapters, dict) else {})
+        else:
+            out[k] = v
+    return out
+
+
+def lora_mask(params):
+    """Boolean pytree: True exactly on adapter leaves (for masked optim)."""
+    def mk(path, node):
+        pass
+    def rec(tree, key=None):
+        if isinstance(tree, dict):
+            return {k: rec(v, k) for k, v in tree.items()}
+        return key in ("lora_a", "lora_b")
+    return rec(params)
+
+
+def materialize_lora(params):
+    """Fold adapters into base weights: W' = W + s·A·B (paper's deploy
+    path after federation finishes). Quantized sites stay quantized with
+    adapters kept (they cannot be folded into NF4 codes losslessly)."""
+    if not isinstance(params, dict):
+        return params
+    if _is_linear_site(params) and "lora_a" in params and "w" in params:
+        w = params["w"]
+        delta = (params["lora_a"] @ params["lora_b"] *
+                 params["lora_scale"]).astype(w.dtype)
+        return {"w": w + delta}
+    return {k: materialize_lora(v) if isinstance(v, dict) else v
+            for k, v in params.items()}
+
+
+def tree_nbytes(tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(tree))
+
+
+def count_params(tree) -> int:
+    return sum(leaf.size for leaf in jax.tree.leaves(tree))
+
+
+def trainable_fraction(params) -> float:
+    """Paper's 'only 1.2% of parameters are trainable' metric."""
+    total = count_params(params)
+    lora = count_params(lora_tree(params))
+    return lora / max(total, 1)

@@ -1,0 +1,52 @@
+"""Channel independence + patching + patch/position embeddings (paper §3.2,
+adopted from PatchTST [18])."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_patches(lookback: int, patch_len: int, stride: int) -> int:
+    assert (lookback - patch_len) % stride == 0, \
+        f"lookback={lookback} patch_len={patch_len} stride={stride}"
+    return (lookback - patch_len) // stride + 1
+
+
+def channel_split(x: jnp.ndarray) -> jnp.ndarray:
+    """Channel independence: (B, L, M) -> (B*M, L) — each univariate series
+    goes through the shared backbone independently (paper Fig. 1b)."""
+    B, L, M = x.shape
+    return x.transpose(0, 2, 1).reshape(B * M, L)
+
+
+def channel_merge(y: jnp.ndarray, batch: int, channels: int) -> jnp.ndarray:
+    """(B*M, T) -> (B, T, M)."""
+    T = y.shape[-1]
+    return y.reshape(batch, channels, T).transpose(0, 2, 1)
+
+
+def make_patches(x: jnp.ndarray, patch_len: int, stride: int) -> jnp.ndarray:
+    """(B*, L) -> (B*, N, P) overlapping patches."""
+    L = x.shape[-1]
+    N = num_patches(L, patch_len, stride)
+    idx = (jnp.arange(N)[:, None] * stride +
+           jnp.arange(patch_len)[None, :])                 # (N, P)
+    return x[..., idx]                                     # gather
+
+
+def init_patch_embed(key, patch_len: int, n_patches: int, d_model: int,
+                     dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_p": (jax.random.normal(k1, (patch_len, d_model)) *
+                patch_len ** -0.5).astype(dtype),          # Eq. (1) W_p
+        "w_pos": (jax.random.normal(k2, (n_patches, d_model)) *
+                  0.02).astype(dtype),                     # Eq. (1) W_pos
+    }
+
+
+def patch_embed(params, patches: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (1): X_d = X_p W_p + W_pos.  (B*, N, P) -> (B*, N, D)."""
+    x = patches @ params["w_p"].astype(patches.dtype)
+    return x + params["w_pos"][None].astype(patches.dtype)

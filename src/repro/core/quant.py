@@ -1,0 +1,70 @@
+"""NF4 (4-bit NormalFloat) blockwise quantization — QLoRA's weight format
+(Dettmers et al. 2023), pure-jnp reference implementation.
+
+TPU adaptation (DESIGN.md §3): codes are packed two-per-byte into uint8 and
+stored with shape (..., in_dim, out_dim // 2); per-block absmax scales are
+float32 with block size ``qblock`` over the row-major flattened weight.
+``repro.kernels.qlora_matmul`` is the fused VMEM-tiled Pallas version of
+``dequant + matmul (+ LoRA)``; this module is its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# bitsandbytes NF4 code book (quantiles of N(0,1), normalized to [-1, 1])
+NF4_CODE = np.array([
+    -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+    -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+    0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+    0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+    0.7229568362236023, 1.0], dtype=np.float32)
+
+
+def nf4_quantize(w: jnp.ndarray, qblock: int = 64):
+    """w: (..., in, out) float -> (w_nf4 uint8 (..., in, out//2),
+    absmax f32 (..., n_blocks))."""
+    *lead, din, dout = w.shape
+    assert dout % 2 == 0, dout
+    n = din * dout
+    assert n % qblock == 0, (n, qblock)
+    nb = n // qblock
+    flat = w.astype(jnp.float32).reshape(*lead, nb, qblock)
+    absmax = jnp.max(jnp.abs(flat), axis=-1)
+    scaled = flat / jnp.maximum(absmax[..., None], 1e-12)
+    code = jnp.asarray(NF4_CODE)
+    idx = jnp.argmin(jnp.abs(scaled[..., None] - code), axis=-1)  # (...,nb,qb)
+    idx = idx.astype(jnp.uint8).reshape(*lead, din, dout)
+    hi, lo = idx[..., 0::2], idx[..., 1::2]
+    packed = (hi << 4) | lo
+    return packed, absmax
+
+
+def nf4_dequant(w_nf4: jnp.ndarray, absmax: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of nf4_quantize -> float32 (..., in, out)."""
+    *lead, din, half = w_nf4.shape
+    dout = half * 2
+    nb = absmax.shape[-1]
+    qblock = (din * dout) // nb
+    hi = (w_nf4 >> 4).astype(jnp.int32)
+    lo = (w_nf4 & 0xF).astype(jnp.int32)
+    idx = jnp.stack([hi, lo], axis=-1).reshape(*lead, din, dout)
+    code = jnp.asarray(NF4_CODE)
+    vals = code[idx]
+    vals = vals.reshape(*lead, nb, qblock) * absmax[..., None]
+    return vals.reshape(*lead, din, dout)
+
+
+def quant_error(w: jnp.ndarray, qblock: int = 64) -> float:
+    """Relative L2 round-trip error (used by tests/benchmarks)."""
+    q, a = nf4_quantize(w, qblock)
+    wd = nf4_dequant(q, a)
+    return float(jnp.linalg.norm(wd - w) / jnp.maximum(jnp.linalg.norm(w),
+                                                       1e-12))
+
+
+def nbytes_nf4(w_shape, qblock: int = 64) -> int:
+    n = int(np.prod(w_shape))
+    return n // 2 + (n // qblock) * 4

@@ -1,0 +1,61 @@
+"""Secure aggregation (SecAgg-lite): pairwise additive masking.
+
+The paper's privacy claim rests on data never leaving the device; adapter
+*updates* still leak gradients. Classic mitigation (Bonawitz et al. 2017):
+every client pair (i, j) derives a shared mask m_ij from a common seed;
+client i adds +m_ij, client j adds −m_ij — masks cancel exactly in the
+cluster sum, so the server only ever sees the aggregate.
+
+This is the single-round, no-dropout-recovery variant (dropout recovery
+needs the full secret-sharing protocol; out of scope — the fed_trainer
+handles stragglers by exclusion *before* masking instead).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _pair_seed(round_idx: int, i: int, j: int) -> jax.Array:
+    a, b = (i, j) if i < j else (j, i)
+    return jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(round_idx), a), b)
+
+
+def _mask_tree(tree, seed, sign: float, scale: float = 1e-2):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(seed, len(leaves))
+    masked = [l + sign * scale * jax.random.normal(k, l.shape, jnp.float32)
+              .astype(l.dtype) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, masked)
+
+
+def mask_update(update, *, client_id: int, participants: Sequence[int],
+                round_idx: int, scale: float = 1e-2):
+    """Client-side: add pairwise masks against every other participant."""
+    out = update
+    for other in participants:
+        if other == client_id:
+            continue
+        sign = 1.0 if client_id < other else -1.0
+        out = _mask_tree(out, _pair_seed(round_idx, client_id, other),
+                         sign, scale)
+    return out
+
+
+def aggregate_masked(masked_updates: List, weights=None):
+    """Server-side: plain (weighted) sum — masks cancel pairwise.
+
+    NOTE: mask cancellation is exact only for the UNWEIGHTED sum; with
+    weighted FedAvg the clients pre-scale their updates by w_s/Σw before
+    masking (standard SecAgg practice), so the server just sums."""
+    n = len(masked_updates)
+    total = masked_updates[0]
+    for u in masked_updates[1:]:
+        total = jax.tree.map(lambda a, b: a + b, total, u)
+    if weights is None:
+        return jax.tree.map(lambda a: a / n, total)
+    return total

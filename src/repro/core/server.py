@@ -1,0 +1,35 @@
+"""Server-side aggregation (paper Algorithm 1, lines 12-14).
+
+Per cluster: weighted FedAvg of client adapter trees, then FedAdam on the
+cluster's global adapters (the paper uses FedAdam to update the QLoRA
+parameters, §4.1 Implementation Details).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.fedadam import fedadam_init, fedadam_update, fedavg
+
+
+class ClusterServer:
+    """Holds one cluster's global adapter state + FedAdam moments."""
+
+    def __init__(self, adapters, *, lr: float = 1e-2):
+        self.adapters = adapters
+        self.opt = fedadam_init(adapters)
+        self.lr = lr
+        self.round = 0
+
+    def aggregate(self, client_adapters, weights):
+        """client_adapters: list of adapter trees; weights: per-device w_s
+        (paper: w_{s,c}, e.g. local dataset sizes)."""
+        avg = fedavg(client_adapters, jnp.asarray(weights, jnp.float32))
+        delta = jax.tree.map(
+            lambda a, g: a.astype(jnp.float32) - g.astype(jnp.float32),
+            avg, self.adapters)
+        self.adapters, self.opt = fedadam_update(
+            self.adapters, delta, self.opt, lr=self.lr)
+        self.round += 1
+        return self.adapters

@@ -1,0 +1,29 @@
+"""Synthetic token streams for LM smoke tests / examples (offline container:
+no real corpora). Markov-chain tokens give non-trivial, learnable structure
+so training-loss decrease is a meaningful signal."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def markov_tokens(num_tokens: int, vocab: int, *, seed: int = 0,
+                  branching: int = 8) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    nxt = rng.integers(0, vocab, size=(vocab, branching))
+    out = np.empty(num_tokens, dtype=np.int32)
+    t = int(rng.integers(0, vocab))
+    for i in range(num_tokens):
+        out[i] = t
+        t = int(nxt[t, rng.integers(0, branching)])
+    return out
+
+
+def lm_batches(tokens: np.ndarray, batch: int, seq: int, *, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        starts = rng.integers(0, n, batch)
+        x = np.stack([tokens[s:s + seq] for s in starts])
+        y = np.stack([tokens[s + 1:s + seq + 1] for s in starts])
+        yield {"tokens": x, "labels": y}

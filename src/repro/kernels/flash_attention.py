@@ -1,0 +1,94 @@
+"""Flash attention Pallas TPU kernel (causal, online softmax).
+
+Canonical TPU flash pattern: grid (B·H, S/bq, S/bk) with the KV axis
+innermost; running max / denominator / accumulator persist in VMEM scratch
+across KV iterations.  Causal blocks above the diagonal are skipped via a
+mask (the index map still visits them; a production variant would use a
+custom grid — noted in EXPERIMENTS.md §Perf as a known further win).
+
+Used by the long-sequence prefill path on TPU; the XLA fallback is the
+blockwise path in repro.models.layers.attention (same algorithm at HLO
+level), which is also this kernel's oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, n_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, D)
+    v = v_ref[0].astype(jnp.float32)                   # (bk, D)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = False):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    bq, bk = min(bq, S), min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = D ** -0.5
+    n_k = S // bk
+    qr = q.reshape(B * H, S, D)
+    kr = k.reshape(B * H, S, D)
+    vr = v.reshape(B * H, S, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, n_k=n_k, causal=causal,
+                          scale=scale),
+        grid=(B * H, S // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, D)

@@ -1,0 +1,47 @@
+"""Jit'd wrappers / dispatch layer for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container) they
+run in interpret mode or fall back to the jnp oracle.  ``use_kernels()``
+reflects the effective mode so model code can branch once.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.qlora_matmul import qlora_matmul as _qlora
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_kernels() -> bool:
+    """Kernels are the default on TPU; REPRO_FORCE_KERNELS=1 forces
+    interpret-mode execution elsewhere (slow — tests only)."""
+    return on_tpu() or os.environ.get("REPRO_FORCE_KERNELS") == "1"
+
+
+def qlora_matmul(x, w_nf4, absmax, lora_a, lora_b, lora_scale, **kw):
+    if use_kernels():
+        return _qlora(x, w_nf4, absmax, lora_a, lora_b, lora_scale,
+                      interpret=not on_tpu(), **kw)
+    return ref.qlora_matmul_ref(x, w_nf4, absmax, lora_a, lora_b, lora_scale)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, **kw):
+    if use_kernels():
+        return _flash(q, k, v, causal=causal, interpret=not on_tpu(), **kw)
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, **kw):
+    if use_kernels():
+        return _rmsnorm(x, scale, eps=eps, interpret=not on_tpu(), **kw)
+    return ref.rmsnorm_ref(x, scale, eps)

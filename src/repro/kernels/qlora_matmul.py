@@ -1,0 +1,109 @@
+"""Fused QLoRA matmul Pallas TPU kernel:  y = x · dequant_nf4(Wq) + s·(x·A)·B
+
+This is FedTime's compute hot spot: every frozen linear of the backbone is
+NF4-quantized with a trainable LoRA bypass (paper C2).  On GPU this is a
+bitsandbytes CUDA kernel; the TPU adaptation (DESIGN.md §3) streams packed
+uint8 codes HBM→VMEM, dequantizes tiles in-register via a one-hot·codebook
+matmul (MXU-friendly — no gather needed), and accumulates both the base and
+the low-rank paths in VMEM scratch across the K grid axis.
+
+Layout contract (matches repro.core.quant when N % qblock == 0):
+  w_nf4   uint8 (K, N//2)  — two 4-bit codes per byte along N
+  absmax  f32   (K, N//qblock) — per-(row, column-block) scale
+  lora_a  f32   (K, r), lora_b f32 (r, N), scale scalar
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost; bn must be a multiple of
+qblock; tiles 128-aligned for the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import NF4_CODE
+
+
+def _kernel(x_ref, wq_ref, amax_ref, a_ref, b_ref, scale_ref, code_ref,
+            o_ref, acc_ref, xa_ref, *, qblock: int, n_k: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...].astype(jnp.float32)                # (bm, bk)
+    wq = wq_ref[...]                                  # (bk, bn//2) uint8
+    amax = amax_ref[...]                              # (bk, bn//qblock)
+
+    # unpack two nibbles per byte -> (bk, bn) int32 codes
+    hi = (wq >> 4).astype(jnp.int32)
+    lo = (wq & 0xF).astype(jnp.int32)
+    bk, half = wq.shape
+    bn = half * 2
+    codes = jnp.stack([hi, lo], axis=-1).reshape(bk, bn)
+
+    # dequant via one-hot @ codebook (gather-free, feeds the MXU)
+    onehot = (codes[..., None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (bk, bn, 16), 2)
+              ).astype(jnp.float32)
+    w = onehot @ code_ref[...]                        # (bk, bn)
+    scale = jnp.repeat(amax, qblock, axis=1)          # (bk, bn)
+    w = w * scale
+
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    xa_ref[...] += jnp.dot(x, a_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _finish():
+        lora = jnp.dot(xa_ref[...], b_ref[...].astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+        o_ref[...] = (acc_ref[...] +
+                      scale_ref[0] * lora).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("qblock", "bm", "bn", "bk",
+                                             "interpret"))
+def qlora_matmul(x, w_nf4, absmax, lora_a, lora_b, lora_scale, *,
+                 qblock: int = 64, bm: int = 128, bn: int = 256,
+                 bk: int = 128, interpret: bool = False):
+    """x: (M, K) -> (M, N). See module docstring for layouts."""
+    M, K = x.shape
+    Kw, half = w_nf4.shape
+    N = half * 2
+    r = lora_a.shape[1]
+    assert Kw == K and lora_b.shape == (r, N), (w_nf4.shape, lora_b.shape)
+    assert N % qblock == 0 and bn % qblock == 0, (N, bn, qblock)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+
+    scale_arr = jnp.asarray(lora_scale, jnp.float32).reshape(1)
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, qblock=qblock, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn // 2), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn // qblock), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, r), lambda i, j, k: (k, 0)),
+            pl.BlockSpec((r, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((16,), lambda i, j, k: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w_nf4, absmax, lora_a, lora_b, scale_arr,
+      jnp.asarray(NF4_CODE, jnp.float32))

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import nf4_dequant
+
+
+def qlora_matmul_ref(x, w_nf4, absmax, lora_a, lora_b, lora_scale):
+    """y = x · dequant(Wq) + s·(x·A)·B, all in f32."""
+    K, half = w_nf4.shape
+    N = half * 2
+    nb_per_row = absmax.shape[-1]
+    # kernel layout: absmax is (K, N//qblock); core.quant dequant expects
+    # flat row-major blocks — identical when qblock | N.
+    w = nf4_dequant(w_nf4, absmax.reshape(-1))
+    base = x.astype(jnp.float32) @ w
+    lora = (x.astype(jnp.float32) @ lora_a.astype(jnp.float32)) @ \
+        lora_b.astype(jnp.float32)
+    return (base + jnp.asarray(lora_scale, jnp.float32) * lora).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D), f32 softmax."""
+    S = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """x: (..., d)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * (var + eps) ** -0.5 *
+            scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,50 @@
+"""Fused RMSNorm Pallas kernel — the framework's most-executed pointwise op
+(2 per transformer block × every block of every backbone).
+
+One pass: mean-of-squares reduction + rsqrt + scale, tiled (rows × d) in
+VMEM; f32 internal math regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                 # (bm, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bm", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, bm: int = 256,
+            interpret: bool = False):
+    """x: (..., d), scale: (d,) -> same shape as x."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xr = x.reshape(-1, d)
+    M = xr.shape[0]
+    bm = min(bm, M)
+    # pad rows to a multiple of bm
+    pad = (-M) % bm
+    if pad:
+        xr = jnp.concatenate([xr, jnp.zeros((pad, d), xr.dtype)], 0)
+    Mp = xr.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(Mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, d), x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    return out[:M].reshape(orig_shape)

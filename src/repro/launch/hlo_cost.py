@@ -1,0 +1,290 @@
+"""Scan-aware HLO cost analysis from compiled text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers model under-reports FLOPs/bytes by ~num_layers×.  This
+parser rebuilds the cost from the post-SPMD HLO text with loop trip counts
+(taken from ``backend_config.known_trip_count``) multiplied through the
+call graph:
+
+  * FLOPs: every ``dot`` op — 2 · numel(result) · contracted dims.
+    (Elementwise FLOPs are ignored: matmul-dominated at these scales.)
+  * bytes: operands + result of every op executed at non-fused level
+    (fusion bodies contribute at their call boundary — matching
+    HloCostAnalysis' "bytes accessed" semantics).
+  * collective bytes: result bytes per collective kind, trip-aware.
+
+All shapes in the partitioned module are per-device, so every number this
+module emits is per-device (multiply by mesh size for global).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s+(ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)="
+    r"(?:\{([^}]*)\}|%?([\w\.\-]+))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "while", "conditional", "after-all",
+                   "opt-barrier"}
+
+
+def _array_segments(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(d, [int(x) for x in dims.split(",")] if dims else [])
+            for d, dims in _ARRAY_RE.findall(type_str)]
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for d, dims in _array_segments(type_str):
+        n = 1
+        for x in dims:
+            n *= x
+        total += n * _DTYPE_BYTES.get(d, 4)
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: List[str]
+    callees: List[Tuple[str, int]]      # (computation, multiplier)
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+
+
+def _parse_op(line: str) -> Optional[Op]:
+    m = _OP_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(2), m.group(3)
+    # result type = leading type expression (array or balanced-paren tuple —
+    # tuples may contain /*index=N*/ comments, so match parens manually)
+    if rhs.startswith("("):
+        depth, j = 0, 0
+        while j < len(rhs):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        result_type = rhs[:j + 1]
+        rest = rhs[j + 1:]
+    else:
+        tm2 = re.match(r"([a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)", rhs)
+        if not tm2:
+            return None
+        result_type = tm2.group(1)
+        rest = rhs[tm2.end():]
+    km = re.match(r"\s+([a-z][\w\-]*)", rest)
+    if not km:
+        return None
+    kind = km.group(1)
+    # operands: %names inside the first (...) after the op kind
+    pstart = rhs.find("(", len(result_type) + km.end(1))
+    operands = []
+    if pstart >= 0:
+        depth, j = 0, pstart
+        while j < len(rhs):
+            if rhs[j] == "(":
+                depth += 1
+            elif rhs[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        operands = re.findall(r"%([\w\.\-]+)", rhs[pstart:j + 1])
+
+    callees: List[Tuple[str, int]] = []
+    trip = 1
+    tm = _TRIP_RE.search(rhs)
+    if tm:
+        trip = int(tm.group(1))
+    for cm in _CALL_ATTR_RE.finditer(rhs):
+        group = cm.group(1) or cm.group(2)
+        mult = trip if kind == "while" else 1
+        for cname in re.findall(r"%?([\w\.\-]+)", group):
+            callees.append((cname, mult))
+    return Op(name, kind, result_type, operands, callees, rhs)
+
+
+def parse_module(hlo_text: str):
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    current: Optional[Computation] = None
+    types: Dict[str, str] = {}
+    for line in hlo_text.splitlines():
+        if not line.strip() or line.strip().startswith("//"):
+            continue
+        if not line.startswith(" "):
+            hm = _COMP_HEADER_RE.match(line)
+            if hm:
+                current = Computation(hm.group(2))
+                comps[current.name] = current
+                if hm.group(1):
+                    entry = current.name
+                # parameter types from header signature
+                sig = hm.group(3)
+                for pm in re.finditer(r"([\w\.\-]+):\s*"
+                                      r"(\([^)]*\)|[a-z][a-z0-9]*\[[0-9,]*\])",
+                                      sig):
+                    types[pm.group(1)] = pm.group(2)
+            continue
+        if current is None:
+            continue
+        op = _parse_op(line)
+        if op:
+            current.ops.append(op)
+            types[op.name] = op.result_type
+    return comps, entry, types
+
+
+def _dot_flops(op: Op, types: Dict[str, str]) -> float:
+    segs = _array_segments(op.result_type)
+    numel = 1
+    for _, dims in segs[:1]:
+        for x in dims:
+            numel *= x
+    cm = _CONTRACT_RE.search(op.raw)
+    contract = 1
+    if cm and op.operands:
+        lhs_t = types.get(op.operands[0], "")
+        lhs_segs = _array_segments(lhs_t)
+        if lhs_segs:
+            lhs_dims = lhs_segs[0][1]
+            for idx in (int(i) for i in cm.group(1).split(",") if i):
+                if idx < len(lhs_dims):
+                    contract *= lhs_dims[idx]
+    return 2.0 * numel * contract
+
+
+def analyze(hlo_text: str) -> dict:
+    comps, entry, types = parse_module(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # computations reached via fusion calls contribute no byte traffic
+    fusion_bodies = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                for cname, _ in op.callees:
+                    fusion_bodies.add(cname)
+
+    # multiplicity of each computation (trip-count aware, memoized DAG walk)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = _topo_order(comps, entry)
+    for cname in order:
+        m = mult[cname]
+        if m == 0 or cname not in comps:
+            continue
+        for op in comps[cname].ops:
+            for callee, k in op.callees:
+                if callee in comps:
+                    mult[callee] += m * k
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll_bytes = {c: 0.0 for c in _COLLECTIVES}
+    coll_counts = {c: 0.0 for c in _COLLECTIVES}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            if op.kind in ("dot", "dot-general"):
+                flops += m * _dot_flops(op, types)
+            if not in_fusion and op.kind not in _SKIP_BYTES_OPS:
+                b = _type_bytes(op.result_type)
+                for o in op.operands:
+                    t = types.get(o)
+                    if t:
+                        b += _type_bytes(t)
+                bytes_acc += m * b
+            base = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base in _COLLECTIVES:
+                coll_bytes[base] += m * _type_bytes(op.result_type)
+                coll_counts[base] += m
+
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_acc,
+        "collective_bytes": coll_bytes,
+        "collective_counts": coll_counts,
+        "collective_total_bytes": sum(coll_bytes.values()),
+        "num_computations": len(comps),
+    }
+
+
+def _topo_order(comps, entry) -> List[str]:
+    """Callers before callees (call graph is a DAG in HLO)."""
+    edges = {c: [cl for op in comp.ops for cl, _ in op.callees
+                 if cl in comps]
+             for c, comp in comps.items()}
+    seen, order = set(), []
+
+    def visit(c):
+        if c in seen:
+            return
+        seen.add(c)
+        order.append(c)          # pre-order: caller first
+        for nxt in edges.get(c, []):
+            visit(nxt)
+
+    visit(entry)
+    # pre-order works because multiplicities only flow downward and we
+    # process in discovery order; but diamond patterns need full ordering:
+    # redo as proper topological sort (Kahn) to be safe.
+    indeg = defaultdict(int)
+    for c, outs in edges.items():
+        for o in set(outs):
+            indeg[o] += 1
+    frontier = [c for c in comps if indeg[c] == 0]
+    topo = []
+    indeg2 = dict(indeg)
+    while frontier:
+        c = frontier.pop()
+        topo.append(c)
+        for o in set(edges.get(c, [])):
+            indeg2[o] -= 1
+            if indeg2[o] == 0:
+                frontier.append(o)
+    return topo if len(topo) == len(comps) else order
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read()), indent=2))

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) — 256 TPU v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips across 2 pods; the
+``pod`` axis carries cross-site aggregation (Caltech/JPL in the paper's ACN
+setting — DESIGN.md §3).
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(*, model: int = 1):
+    """Whatever this host actually has (CPU smoke / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants for the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

@@ -1,0 +1,104 @@
+"""Dry-run argument construction: ShapeDtypeStruct stand-ins + shardings for
+every (architecture × input shape) pair — no device allocation anywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES_BY_NAME
+from repro.core.lora import FAMILY_TARGETS, attach_lora, quantize_base
+from repro.dist.sharding import (cache_specs, data_specs, opt_state_specs,
+                                 param_specs, to_shardings)
+from repro.launch.steps import decode_force_window
+from repro.models.registry import (decode_batch_shapes, get_model,
+                                   train_batch_shapes)
+from repro.optim.adamw import adamw_init
+
+
+def _sds(tree_of_shape_dtype):
+    return {k: jax.ShapeDtypeStruct(shp, dt)
+            for k, (shp, dt) in tree_of_shape_dtype.items()}
+
+
+def param_shapes(cfg: ModelConfig, *, fed: bool = False):
+    """abstract parameter tree via eval_shape (no allocation)."""
+    api = get_model(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def build(k):
+        p = api.init(cfg, k)
+        if fed:
+            ft = cfg.fedtime
+            targets = FAMILY_TARGETS[cfg.family]
+            p = attach_lora(p, k, rank=ft.lora_rank, alpha=ft.lora_alpha,
+                            targets=targets)
+            if ft.qlora:
+                p = quantize_base(p, qblock=ft.qlora_block, targets=targets)
+        return p
+
+    return jax.eval_shape(build, key)
+
+
+def dryrun_args(arch_cfg: ModelConfig, shape_name: str, mesh, *,
+                fed: bool = False) -> Tuple[str, tuple, tuple, tuple]:
+    """Returns (step_kind, arg ShapeDtypeStructs, in_shardings,
+    out_shardings)."""
+    cfg = arch_cfg
+    shape = SHAPES_BY_NAME[shape_name]
+    api = get_model(cfg)
+    params = param_shapes(cfg, fed=fed)
+    p_shard = to_shardings(param_specs(params, mesh), mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        if fed:
+            from repro.core.lora import lora_tree
+            opt = jax.eval_shape(lambda p: adamw_init(lora_tree(p)), params)
+        else:
+            opt = jax.eval_shape(adamw_init, params)
+        from repro.core.lora import lora_tree
+        batch = _sds(train_batch_shapes(cfg, shape.global_batch,
+                                        shape.seq_len))
+        if fed:
+            ad = jax.eval_shape(lora_tree, params)
+            o_shard = to_shardings(opt_state_specs(ad, mesh), mesh)
+        else:
+            # ZeRO-1: m/v additionally sharded over data(+pod)
+            o_shard = to_shardings(opt_state_specs(params, mesh), mesh)
+        opt_shard = {"mu": o_shard, "nu": o_shard}
+        b_shard = to_shardings(data_specs(batch, mesh), mesh)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        return ("fed_train" if fed else "train",
+                (params, opt, batch, step),
+                (p_shard, opt_shard, b_shard, repl),
+                (p_shard, opt_shard, repl))
+
+    if shape.kind == "prefill":
+        batch = _sds(train_batch_shapes(cfg, shape.global_batch,
+                                        shape.seq_len))
+        batch.pop("labels")
+        cache = jax.eval_shape(
+            lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                   force_window=0, dtype=jnp.bfloat16))
+        c_shard = to_shardings(cache_specs(cache, mesh), mesh)
+        b_shard = to_shardings(data_specs(batch, mesh), mesh)
+        return ("prefill", (params, batch), (p_shard, b_shard),
+                (c_shard, repl))
+
+    # decode
+    fw = decode_force_window(cfg, shape.seq_len)
+    cache = jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len,
+                               force_window=fw, dtype=jnp.bfloat16))
+    c_shard = to_shardings(cache_specs(cache, mesh), mesh)
+    batch = _sds(decode_batch_shapes(cfg, shape.global_batch))
+    b_shard = to_shardings(data_specs(batch, mesh), mesh)
+    tok_shard = b_shard["token"]
+    return ("serve", (params, cache, batch),
+            (p_shard, c_shard, b_shard),
+            (tok_shard, c_shard))

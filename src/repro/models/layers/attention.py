@@ -1,0 +1,312 @@
+"""Attention: GQA + qk-norm + logit softcap + sliding window + prefix-LM,
+with a memory-bounded blockwise (online-softmax) path for long sequences and
+a ring-buffer KV cache for decode.
+
+Position-based masking: every mask is derived from absolute positions of the
+query rows (``q_pos``) and of the KV slots (``kv_pos``); a slot with position
+``-1`` is invalid (empty ring-buffer slot).  This one rule serves training,
+prefill, sliding-window decode and prefix-LM uniformly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.embeddings import apply_rope
+from repro.models.layers.linear import dense, init_dense
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+
+_NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, *, q_in: int | None = None, kv_in: int | None = None,
+                   out_dim: int | None = None, dtype=jnp.float32):
+    """q/k/v/o projections (+ optional per-head qk RMSNorm scales)."""
+    dh = cfg.resolved_head_dim()
+    q_in = q_in or cfg.d_model
+    kv_in = kv_in or q_in
+    out_dim = out_dim or cfg.d_model
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(kq, q_in, cfg.num_heads * dh, dtype),
+        "wk": init_dense(kk, kv_in, cfg.num_kv_heads * dh, dtype),
+        "wv": init_dense(kv, kv_in, cfg.num_kv_heads * dh, dtype),
+        "wo": init_dense(ko, cfg.num_heads * dh, out_dim, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+def _as_b(pos, batch):
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        pos = jnp.broadcast_to(pos[None, :], (batch, pos.shape[0]))
+    return pos
+
+
+def _mask(q_pos, kv_pos, kind: str, window: int, prefix_len) -> jnp.ndarray:
+    """(B, 1, 1, Sq, Skv) boolean mask from absolute positions."""
+    qp = q_pos[:, None, None, :, None]
+    kp = kv_pos[:, None, None, None, :]
+    valid = kp >= 0
+    if kind == "causal":
+        m = kp <= qp
+    elif kind == "prefix":
+        pl = jnp.asarray(prefix_len, jnp.int32).reshape(-1, 1, 1, 1, 1)
+        m = (kp <= qp) | (kp < pl)
+    elif kind == "full":
+        m = jnp.ones(qp.shape[:-1] + (kp.shape[-1],), bool)
+    else:
+        raise ValueError(kind)
+    if window > 0 and kind != "full":
+        m = m & (qp - kp < window)
+    return m & valid
+
+
+# ---------------------------------------------------------------------------
+# Scaled dot-product attention (naive + blockwise online-softmax)
+# ---------------------------------------------------------------------------
+
+def _scores(q, k, scale: float, softcap: float) -> jnp.ndarray:
+    """q: (B,Sq,Hk,G,D)  k: (B,Skv,Hk,D) -> (B,Hk,G,Sq,Skv) float32."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def sdpa(q, k, v, *, q_pos, kv_pos, kind: str = "causal", window: int = 0,
+         prefix_len=None, softcap: float = 0.0,
+         block_q: int = 0, block_kv: int = 0) -> jnp.ndarray:
+    """General SDPA.
+
+    q: (B, Sq, H, D); k, v: (B, Skv, Hk, D); returns (B, Sq, H, D).
+    ``block_q``/``block_kv`` > 0 selects the memory-bounded blockwise path
+    (required for 32k+ sequences; see DESIGN.md §3).
+    """
+    B, Sq, H, D = q.shape
+    Hk = k.shape[2]
+    G = H // Hk
+    scale = D ** -0.5
+    q_pos = _as_b(q_pos, B)
+    kv_pos = _as_b(kv_pos, B)
+    qg = q.reshape(B, Sq, Hk, G, D)
+
+    if block_kv <= 0 or k.shape[1] <= block_kv:
+        s = _scores(qg, k, scale, softcap)
+        m = _mask(q_pos, kv_pos, kind, window, prefix_len)
+        s = jnp.where(m, s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        # fully-masked rows produce uniform garbage; zero them via the mask
+        p = jnp.where(m.any(-1, keepdims=True), p, 0.0).astype(q.dtype)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+        return o.reshape(B, Sq, H, D)
+
+    # ---- blockwise path: outer map over Q blocks, inner scan over KV ----
+    Skv = k.shape[1]
+    assert Skv % block_kv == 0, (Skv, block_kv)
+    if block_q <= 0 or Sq < block_q:
+        block_q = Sq
+    assert Sq % block_q == 0, (Sq, block_q)
+    nq, nk = Sq // block_q, Skv // block_kv
+
+    k_blocks = k.reshape(B, nk, block_kv, Hk, D)
+    v_blocks = v.reshape(B, nk, block_kv, Hk, D)
+    kp_blocks = kv_pos.reshape(B, nk, block_kv)
+
+    def one_q_block(args):
+        qb, qpb = args                      # (B,block_q,Hk,G,D), (B,block_q)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, blk):
+            m_run, l_run, acc = carry
+            kb, vb, kpb = blk               # (B,block_kv,Hk,D), ..., (B,block_kv)
+            s = _scores(qb, kb, scale, softcap)           # (B,Hk,G,bq,bk) f32
+            msk = _mask(qpb, kpb, kind, window, prefix_len)
+            s = jnp.where(msk, s, _NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hk, G, block_q), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, block_q), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, block_q, D), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (k_blocks.transpose(1, 0, 2, 3, 4),
+             v_blocks.transpose(1, 0, 2, 3, 4),
+             kp_blocks.transpose(1, 0, 2)))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out                           # (B,Hk,G,block_q,D)
+
+    qg_blocks = qg.reshape(B, nq, block_q, Hk, G, D).transpose(1, 0, 2, 3, 4, 5)
+    qp_blocks = q_pos.reshape(B, nq, block_q).transpose(1, 0, 2)
+    outs = jax.lax.map(one_q_block, (qg_blocks, qp_blocks))
+    # outs: (nq, B, Hk, G, block_q, D) -> (B, nq·block_q = Sq, Hk, G, D)
+    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hk, G, D)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (train / prefill / encoder / cross)
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params, cfg, x, kv_x, positions, kv_positions, use_rope):
+    dh = cfg.resolved_head_dim()
+    B, Sq = x.shape[0], x.shape[1]
+    kv_x = x if kv_x is None else kv_x
+    Skv = kv_x.shape[1]
+    q = dense(params["wq"], x).reshape(B, Sq, cfg.num_heads, dh)
+    k = dense(params["wk"], kv_x).reshape(B, Skv, cfg.num_kv_heads, dh)
+    v = dense(params["wv"], kv_x).reshape(B, Skv, cfg.num_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, _as_b(positions, B), cfg.rope_theta)
+        k = apply_rope(k, _as_b(kv_positions, B), cfg.rope_theta)
+    return q, k, v
+
+
+def attention(params, cfg, x, *, positions, kind: str = "causal",
+              window: int = 0, prefix_len=None, kv_x=None, kv_positions=None,
+              use_rope: bool = True, block_q: int = 0, block_kv: int = 0,
+              return_kv: bool = False):
+    """Full-sequence attention. x: (B, S, d_in) -> (B, S, out_dim)."""
+    kv_positions = positions if kv_positions is None else kv_positions
+    q, k, v = _project_qkv(params, cfg, x, kv_x, positions, kv_positions, use_rope)
+    o = sdpa(q, k, v, q_pos=positions, kv_pos=kv_positions, kind=kind,
+             window=window, prefix_len=prefix_len,
+             softcap=cfg.attn_logit_softcap,
+             block_q=block_q, block_kv=block_kv)
+    B, Sq = x.shape[0], x.shape[1]
+    y = dense(params["wo"], o.reshape(B, Sq, -1))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+def kv_cache_int8() -> bool:
+    """int8 KV-cache quantization (per-slot-per-head absmax scales): halves
+    the decode memory term — §Perf iteration 11. Env-gated so baselines
+    stay reproducible."""
+    import os
+    return os.environ.get("REPRO_KV_INT8", "0") == "1"
+
+
+def init_attn_cache(batch: int, cache_len: int, num_kv_heads: int, head_dim: int,
+                    dtype=jnp.bfloat16):
+    if kv_cache_int8():
+        return {
+            "k": jnp.zeros((batch, cache_len, num_kv_heads, head_dim),
+                           jnp.int8),
+            "v": jnp.zeros((batch, cache_len, num_kv_heads, head_dim),
+                           jnp.int8),
+            "k_scale": jnp.zeros((batch, cache_len, num_kv_heads, 1),
+                                 jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, cache_len, num_kv_heads, 1),
+                                 jnp.bfloat16),
+            "kv_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, num_kv_heads, head_dim), dtype),
+        "kv_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _quant_kv(x):
+    """(B, S, Hk, dh) -> (int8 codes, bf16 scales (B,S,Hk,1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) *
+            scale.astype(jnp.float32)).astype(dtype)
+
+
+def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
+                kind: str = "causal", prefix_len=None):
+    """One decode step.
+
+    x_t: (B, 1, d_in); ``pos`` scalar int32 (synchronous batch decode);
+    cache: ring buffer from ``init_attn_cache`` (cache_len == window for SWA
+    layers, == max_seq for global layers).  Returns (y_t, new_cache).
+    """
+    B = x_t.shape[0]
+    cache_len = cache["k"].shape[1]
+    int8 = "k_scale" in cache
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_t, v_t = _project_qkv(
+        params, cfg, x_t, None,
+        positions=jnp.full((B, 1), pos, jnp.int32),
+        kv_positions=jnp.full((B, 1), pos, jnp.int32),
+        use_rope=True)
+    slot = jnp.mod(pos, cache_len)
+
+    def upd(buf, val):
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), slot, axis=1)
+
+    new_cache = {}
+    if int8:
+        kq, ks = _quant_kv(k_t)
+        vq, vs = _quant_kv(v_t)
+        new_cache["k"] = upd(cache["k"], kq)
+        new_cache["v"] = upd(cache["v"], vq)
+        new_cache["k_scale"] = upd(cache["k_scale"], ks)
+        new_cache["v_scale"] = upd(cache["v_scale"], vs)
+        k_full = _dequant_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
+        v_full = _dequant_kv(new_cache["v"], new_cache["v_scale"], q.dtype)
+    else:
+        new_cache["k"] = k_full = upd(cache["k"], k_t)
+        new_cache["v"] = v_full = upd(cache["v"], v_t)
+    pos_new = jax.lax.dynamic_update_slice_in_dim(
+        cache["kv_pos"], jnp.full((B, 1), pos, jnp.int32), slot, axis=1)
+    new_cache["kv_pos"] = pos_new
+    o = sdpa(q, k_full, v_full,
+             q_pos=jnp.full((B, 1), pos, jnp.int32), kv_pos=pos_new,
+             kind=kind, window=window, prefix_len=prefix_len,
+             softcap=cfg.attn_logit_softcap)
+    y = dense(params["wo"], o.reshape(B, 1, -1))
+    return y, new_cache
+
+
+def attn_cross_decode(params, cfg, x_t, mem_k, mem_v, mem_pos):
+    """Cross-attention decode step against fixed encoder memory (k/v
+    precomputed at prefill)."""
+    B = x_t.shape[0]
+    dh = cfg.resolved_head_dim()
+    q = dense(params["wq"], x_t).reshape(B, 1, cfg.num_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    o = sdpa(q, mem_k, mem_v,
+             q_pos=jnp.zeros((B, 1), jnp.int32), kv_pos=mem_pos,
+             kind="full", softcap=cfg.attn_logit_softcap)
+    return dense(params["wo"], o.reshape(B, 1, -1))

@@ -1,0 +1,43 @@
+"""Rotary position embeddings + token/vocab embedding helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for RoPE, shape (head_dim // 2,) float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply rotary embedding.
+
+    x: (..., S, H, Dh) — rotated over the last dim.
+    positions: broadcastable to (..., S) int32 absolute positions.
+    """
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, dh/2)
+    # insert head axis: (..., S, 1, dh/2)
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return rot.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return params["table"][tokens]
+
+
+def unembed(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied LM head: (..., d) @ (vocab, d)^T -> (..., vocab)."""
+    return jnp.einsum("...d,vd->...v", x, params["table"])

@@ -1,0 +1,53 @@
+"""Linear projection with first-class LoRA / QLoRA support.
+
+Every linear in the framework goes through ``dense(p, x)``.  The parameter
+dict ``p`` dispatches the math:
+
+  {"w"}                                   -> plain matmul
+  {"w", "lora_a", "lora_b", "lora_scale"} -> W x + s * B (A x)      (LoRA)
+  {"w_nf4", "absmax", ...}                -> dequant(W) x [+ LoRA]  (QLoRA)
+
+This is the paper's C2 mechanism (PEFT) made architecture-agnostic: the
+federated layer only ever reads/writes the ``lora_a``/``lora_b`` leaves
+(see repro.core.lora), while the base weight stays frozen (and optionally
+NF4-quantized) on the device.
+
+NF4 layout: ``w_nf4`` is uint8 of shape (in_dim, out_dim // 2) — two 4-bit
+codes packed per byte along the output dim; ``absmax`` is float32 of shape
+(in_dim * out_dim // qblock,).  The quantization block size is derived from
+the array shapes, so no static metadata needs to ride in the pytree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, in_dim: int, out_dim: int, dtype=jnp.float32,
+               scale: float | None = None):
+    if scale is None:
+        scale = in_dim ** -0.5
+    w = jax.random.normal(key, (in_dim, out_dim)) * scale
+    return {"w": w.astype(dtype)}
+
+
+def dense(p, x: jnp.ndarray) -> jnp.ndarray:
+    """Apply a (possibly LoRA-adapted, possibly NF4-quantized) linear map."""
+    if "w_nf4" in p:
+        from repro.core.quant import nf4_dequant  # lazy: avoid import cycle
+        w = nf4_dequant(p["w_nf4"], p["absmax"]).astype(x.dtype)
+    else:
+        w = p["w"].astype(x.dtype)
+    y = x @ w
+    if "lora_a" in p:
+        a = p["lora_a"].astype(x.dtype)
+        b = p["lora_b"].astype(x.dtype)
+        y = y + (x @ a) @ b * p["lora_scale"].astype(x.dtype)
+    return y
+
+
+def dense_out_dim(p) -> int:
+    if "w_nf4" in p:
+        return p["w_nf4"].shape[-1] * 2
+    return p["w"].shape[-1]

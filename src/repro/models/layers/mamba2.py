@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-parallel formulation.
+
+TPU adaptation (DESIGN.md §3): instead of the CUDA selective-scan kernel, we
+use the chunkwise matmul decomposition — intra-chunk attention-like matmuls
+(MXU friendly) + an inter-chunk ``lax.scan`` over the (H, P, N) state.  All
+decay exponentials are differences of cumulative *negative* log-decays, so
+every ``exp`` argument is ≤ 0 (stable by construction, no max-shift needed).
+
+State update:   h_t = exp(dt_t * -exp(A_log)) h_{t-1} + (dt_t x_t) ⊗ B_t
+Output:         y_t = C_t · h_t + D ⊙ x_t
+Gating/out:     out = out_proj( RMSNorm(y) * silu(z) )
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.linear import dense, init_dense
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+
+
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    # in_proj emits [z, x, B, C, dt]
+    conv_dim = d_inner + 2 * s.state_dim
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * s.state_dim + n_heads
+    p = {
+        "in_proj": init_dense(k1, cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(k2, (s.conv_width, conv_dim)) *
+                   (s.conv_width ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (n_heads,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(jnp.float32),
+        "norm": init_rmsnorm(d_inner),
+        "out_proj": init_dense(k4, d_inner, cfg.d_model, dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,Cd); w: (W,Cd)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, n_heads, _ = mamba2_dims(cfg)
+    z, xc, Bm, Cm, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + s.state_dim,
+         2 * d_inner + 2 * s.state_dim],
+        axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def mamba2_forward(params, cfg: ModelConfig, x: jnp.ndarray,
+                   initial_state=None, return_cache: bool = False):
+    """x: (B, S, d_model) -> (y, final_state).  S must divide by chunk_size."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    B_, S, _ = x.shape
+    Lc = min(s.chunk_size, S)
+    pad = (-S) % Lc
+    if pad:
+        # pad to a chunk multiple; outputs are sliced back. NOTE: the
+        # returned state then reflects the padded steps — callers that
+        # thread state (prefill) must pass chunk-aligned S.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nC = S // Lc
+
+    zxbcdt = dense(params["in_proj"], x)
+    z, xc, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    if return_cache:
+        W = s.conv_width
+        tail = conv_in[:, max(0, S - pad - (W - 1)):S - pad, :]
+        if tail.shape[1] < W - 1:
+            tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"].astype(x.dtype),
+                                        params["conv_b"].astype(x.dtype)))
+    xc, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + s.state_dim], axis=-1)
+
+    H, P, N = n_heads, s.head_dim, s.state_dim
+    xh = xc.reshape(B_, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"][None, None, :])          # (B,S,H)
+    la = -jnp.exp(params["A_log"])[None, None, :] * dt              # (B,S,H) <= 0
+    xb = xh.astype(jnp.float32) * dt[..., None]                     # dt folded into x
+
+    # chunk views
+    xb_c = xb.reshape(B_, nC, Lc, H, P)
+    B_c = Bm.reshape(B_, nC, Lc, N).astype(jnp.float32)
+    C_c = Cm.reshape(B_, nC, Lc, N).astype(jnp.float32)
+    la_c = la.reshape(B_, nC, Lc, H)
+    cum = jnp.cumsum(la_c, axis=2)                                  # (B,C,L,H)
+
+    # ---- intra-chunk (causal "attention" with decay) ----
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]             # (B,C,Li,Lj,H)
+    causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)                                            # <= 1
+    cb = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)
+    w = cb[..., None] * decay                                       # (B,C,Li,Lj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xb_c)
+
+    # ---- chunk states + inter-chunk scan ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,C,L,H)
+    S_chunk = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                         decay_to_end, B_c, xb_c)                   # (B,C,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                         # (B,C,H)
+
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((B_, H, P, N), jnp.float32))
+
+    def chunk_step(h, inp):
+        s_c, cd = inp                                               # (B,H,P,N),(B,H)
+        h_out = h                                                   # state BEFORE chunk
+        h_new = h * cd[:, :, None, None] + s_c
+        return h_new, h_out
+
+    h_final, h_before = jax.lax.scan(
+        chunk_step, h0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_before = h_before.transpose(1, 0, 2, 3, 4)                    # (B,C,H,P,N)
+
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", C_c, h_before) * \
+        jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(B_, S, H, P) + \
+        params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, S, d_inner).astype(x.dtype)
+
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(params["out_proj"], y)
+    if pad:
+        out = out[:, :S - pad]
+    if return_cache:
+        return out, {"ssm_state": h_final, "conv_buf": tail}
+    return out, h_final
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-step recurrence)
+# ---------------------------------------------------------------------------
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    return {
+        "ssm_state": jnp.zeros((batch, n_heads, s.head_dim, s.state_dim),
+                               jnp.float32),
+        "conv_buf": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(params, cfg: ModelConfig, x_t: jnp.ndarray, cache):
+    """x_t: (B, 1, d_model) -> (y_t, new_cache)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_dim = mamba2_dims(cfg)
+    B_ = x_t.shape[0]
+    zxbcdt = dense(params["in_proj"], x_t)
+    z, xc, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)                # (B,1,Cd)
+
+    buf = jnp.concatenate([cache["conv_buf"],
+                           conv_in.astype(cache["conv_buf"].dtype)], axis=1)
+    w = params["conv_w"].astype(x_t.dtype)                          # (W,Cd)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", buf, w) + params["conv_b"].astype(x_t.dtype))
+    new_buf = buf[:, 1:, :]
+    xc1, Bm1, Cm1 = jnp.split(conv_out, [d_inner, d_inner + s.state_dim],
+                              axis=-1)
+
+    H, P, N = n_heads, s.head_dim, s.state_dim
+    xh = xc1.reshape(B_, H, P).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32) +
+                          params["dt_bias"][None, :])               # (B,H)
+    a = jnp.exp(-jnp.exp(params["A_log"])[None, :] * dt1)           # (B,H)
+    xb = xh * dt1[..., None]
+    h_new = cache["ssm_state"] * a[:, :, None, None] + \
+        jnp.einsum("bhp,bn->bhpn", xb, Bm1.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm1.astype(jnp.float32), h_new) + \
+        params["D"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_inner).astype(x_t.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(params["out_proj"], y)
+    return out, {"ssm_state": h_new, "conv_buf": new_buf}

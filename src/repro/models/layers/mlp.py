@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.linear import dense, init_dense
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32,
+             out_dim: int | None = None):
+    out_dim = out_dim or d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "gate": init_dense(k1, d_model, d_ff, dtype),
+            "up": init_dense(k2, d_model, d_ff, dtype),
+            "down": init_dense(k3, d_ff, out_dim, dtype),
+        }
+    return {
+        "up": init_dense(k1, d_model, d_ff, dtype),
+        "down": init_dense(k2, d_ff, out_dim, dtype),
+    }
+
+
+def mlp(params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "swiglu":
+        h = jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x)
+    elif activation == "geglu":
+        h = jax.nn.gelu(dense(params["gate"], x), approximate=True) * dense(params["up"], x)
+    elif activation == "gelu":
+        h = jax.nn.gelu(dense(params["up"], x), approximate=True)
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return dense(params["down"], h)

@@ -1,0 +1,35 @@
+"""Normalization layers (from scratch — no flax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6, *, gemma_style: bool = False):
+    """RMSNorm in f32, cast back. ``gemma_style`` uses (1 + scale)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * (var + eps) ** -0.5
+    scale = params["scale"].astype(jnp.float32)
+    y = y * (1.0 + scale) if gemma_style else y * scale
+    return y.astype(dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype),
+            "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * (var + eps) ** -0.5
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

@@ -1,0 +1,299 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, true recurrence).  [arXiv:2405.04517]
+
+mLSTM is computed in the max-stabilized chunkwise form (TPU adaptation: the
+original is a fused CUDA recurrence; chunkwise turns it into MXU matmuls +
+one ``lax.scan`` over chunk states, exactly like Mamba2's SSD — but with an
+exponential input gate that requires running-max stabilization and a
+normalizer state).
+
+Cell (per head):
+  C_t = f_t C_{t-1} + i_t k_t v_t^T        (matrix memory,  f=σ(f̃), i=exp(ĩ))
+  n_t = f_t n_{t-1} + i_t k_t              (normalizer)
+  h_t = (C_t^T q_t) / max(|n_t^T q_t|, exp(-m_t))   with running log-max m_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.linear import dense, init_dense
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+
+
+def mlstm_dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_inner = int(x.mlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dh = d_inner // H
+    return d_inner, H, dh
+
+
+def init_mlstm_block(key, cfg: ModelConfig, dtype=jnp.float32):
+    x = cfg.xlstm
+    d_inner, H, dh = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    s = cfg.d_model ** -0.5
+    return {
+        "up": init_dense(ks[0], cfg.d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (x.conv_width, d_inner)) *
+                   (x.conv_width ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "wq": init_dense(ks[2], d_inner, d_inner, dtype),
+        "wk": init_dense(ks[3], d_inner, d_inner, dtype),
+        "wv": init_dense(ks[4], d_inner, d_inner, dtype),
+        "w_if": {"w": (jax.random.normal(ks[5], (d_inner, 2 * H)) * s
+                       ).astype(jnp.float32)},
+        "b_if": jnp.concatenate([jnp.zeros((H,)),                    # i bias
+                                 jnp.linspace(3.0, 6.0, H)]),        # f bias
+        "norm": init_rmsnorm(d_inner),
+        "down": init_dense(ks[6], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    x = cfg.xlstm
+    d_inner, H, dh = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+        "conv_buf": jnp.zeros((batch, x.conv_width - 1, d_inner), dtype),
+    }
+
+
+def _mlstm_qkvif(params, cfg, x):
+    d_inner, H, dh = mlstm_dims(cfg)
+    up = dense(params["up"], x)
+    xm, z = jnp.split(up, 2, axis=-1)
+    cx = jax.nn.silu(_causal_conv(xm, params["conv_w"].astype(x.dtype),
+                                  params["conv_b"].astype(x.dtype)))
+    B_, S = x.shape[0], x.shape[1]
+    q = dense(params["wq"], cx).reshape(B_, S, H, dh) * (dh ** -0.5)
+    k = dense(params["wk"], cx).reshape(B_, S, H, dh)
+    v = dense(params["wv"], xm).reshape(B_, S, H, dh)
+    gates = (cx.astype(jnp.float32) @ params["w_if"]["w"] +
+             params["b_if"][None, None, :])
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                     # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_pre)
+    return q, k, v, z, i_pre, log_f
+
+
+def mlstm_block_forward(params, cfg: ModelConfig, x: jnp.ndarray,
+                        state=None, return_cache: bool = False):
+    """x: (B, S, d_model) -> (y, state). Chunked stabilized mLSTM."""
+    xc = cfg.xlstm
+    d_inner, H, dh = mlstm_dims(cfg)
+    B_, S, _ = x.shape
+    Lc = min(xc.chunk_size, S)
+    pad = (-S) % Lc
+    if pad:
+        # pad to a chunk multiple (outputs sliced back; see mamba2 note)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nC = S // Lc
+
+    q, k, v, z, i_pre, log_f = _mlstm_qkvif(params, cfg, x)
+    if return_cache:
+        W = xc.conv_width
+        up = dense(params["up"], x)
+        xm_tail, _ = jnp.split(up, 2, axis=-1)
+        tail = xm_tail[:, max(0, S - pad - (W - 1)):S - pad, :]
+        if tail.shape[1] < W - 1:
+            tail = jnp.pad(tail, ((0, 0), (W - 1 - tail.shape[1], 0), (0, 0)))
+
+    def chunkify(a):  # (B,S,...) -> (nC,B,Lc,...)
+        return a.reshape((B_, nC, Lc) + a.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, a.ndim + 1)))
+
+    qc, kc, vc = chunkify(q.astype(jnp.float32)), chunkify(
+        k.astype(jnp.float32)), chunkify(v.astype(jnp.float32))
+    ic, fc = chunkify(i_pre), chunkify(log_f)
+
+    if state is None:
+        C0 = jnp.zeros((B_, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B_, H, dh), jnp.float32)
+        m0 = jnp.zeros((B_, H), jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    causal = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    def chunk_step(carry, inp):
+        C_st, n_st, m_st = carry
+        qb, kb, vb, ib, fb = inp          # (B,L,H,dh) / (B,L,H)
+        cum = jnp.cumsum(fb, axis=1)                               # (B,L,H)
+        # intra weights  w_ij = cum_i - cum_j + i_j   (j <= i)
+        w = cum[:, :, None, :] - cum[:, None, :, :] + ib[:, None, :, :]
+        w = jnp.where(causal[None, :, :, None], w, -jnp.inf)       # (B,Li,Lj,H)
+        s_row = cum + m_st[:, None, :]                             # state path
+        m_row = jnp.maximum(w.max(axis=2), s_row)                  # (B,L,H)
+        m_row = jnp.maximum(m_row, 0.0)  # lower-bound: |den| floor uses exp(-m)
+        p = jnp.exp(w - m_row[:, :, None, :])                      # (B,Li,Lj,H)
+        qk = jnp.einsum("blhd,bmhd->blmh", qb, kb)                 # (B,Li,Lj,H)
+        num = jnp.einsum("blmh,bmhd->blhd", p * qk, vb)
+        den = jnp.einsum("blmh->blh", p * qk)
+        st_scale = jnp.exp(s_row - m_row)                          # (B,L,H)
+        num = num + st_scale[..., None] * jnp.einsum(
+            "blhd,bhde->blhe", qb, C_st)
+        den = den + st_scale * jnp.einsum("blhd,bhd->blh", qb, n_st)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+
+        # state update (to end of chunk)
+        cum_L = cum[:, -1, :]                                      # (B,H)
+        w_end = cum_L[:, None, :] - cum[:, :, :] + ib              # (B,L,H)
+        m_next = jnp.maximum(m_st + cum_L, w_end.max(axis=1))
+        sc = jnp.exp(w_end - m_next[:, None, :])                   # (B,L,H)
+        C_new = (jnp.exp(m_st + cum_L - m_next)[:, :, None, None] * C_st +
+                 jnp.einsum("blh,blhd,blhe->bhde", sc, kb, vb))
+        n_new = (jnp.exp(m_st + cum_L - m_next)[:, :, None] * n_st +
+                 jnp.einsum("blh,blhd->bhd", sc, kb))
+        return (C_new, n_new, m_next), h
+
+    (Cf, nf, mf), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                    (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B_, S, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(params["down"], y)
+    if pad:
+        out = out[:, :S - pad]
+    new_state = {"C": Cf, "n": nf, "m": mf}
+    if return_cache:
+        new_state["conv_buf"] = tail
+    return out, new_state
+
+
+def mlstm_block_decode(params, cfg: ModelConfig, x_t, cache):
+    """x_t: (B,1,d_model) single-step recurrent mLSTM."""
+    d_inner, H, dh = mlstm_dims(cfg)
+    B_ = x_t.shape[0]
+    up = dense(params["up"], x_t)
+    xm, z = jnp.split(up, 2, axis=-1)
+    buf = jnp.concatenate([cache["conv_buf"],
+                           xm.astype(cache["conv_buf"].dtype)], axis=1)
+    w = params["conv_w"].astype(x_t.dtype)
+    cx = jax.nn.silu(jnp.einsum("bwc,wc->bc", buf, w) +
+                     params["conv_b"].astype(x_t.dtype))[:, None, :]
+    new_buf = buf[:, 1:, :]
+    q = dense(params["wq"], cx).reshape(B_, H, dh).astype(jnp.float32) * (dh ** -0.5)
+    k = dense(params["wk"], cx).reshape(B_, H, dh).astype(jnp.float32)
+    v = dense(params["wv"], xm).reshape(B_, H, dh).astype(jnp.float32)
+    gates = (cx[:, 0].astype(jnp.float32) @ params["w_if"]["w"] +
+             params["b_if"][None, :])
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)                     # (B,H)
+    log_f = jax.nn.log_sigmoid(f_pre)
+
+    m_new = jnp.maximum(log_f + cache["m"], i_pre)
+    f_sc = jnp.exp(log_f + cache["m"] - m_new)
+    i_sc = jnp.exp(i_pre - m_new)
+    C_new = f_sc[:, :, None, None] * cache["C"] + \
+        i_sc[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n_new = f_sc[:, :, None] * cache["n"] + i_sc[:, :, None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    den = jnp.einsum("bhd,bhd->bh", q, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B_, 1, d_inner).astype(x_t.dtype)
+    y = rmsnorm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(params["down"], y)
+    return out, {"C": C_new, "n": n_new, "m": m_new, "conv_buf": new_buf}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, exponential gating, block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    d_ff = int(cfg.xlstm.slstm_proj_factor * cfg.d_model)
+    return H, dh, d_ff
+
+
+def init_slstm_block(key, cfg: ModelConfig, dtype=jnp.float32):
+    H, dh, d_ff = slstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    return {
+        "w_in": init_dense(ks[0], d, 4 * d, dtype),     # z,i,f,o pre-acts
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh)) * (dh ** -0.5)
+              ).astype(jnp.float32),                    # recurrent, block-diag
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              jnp.ones((d,)) * 3.0,     # f bias
+                              jnp.zeros((d,))]),
+        "norm": init_rmsnorm(d),
+        "ffn_gate": init_dense(ks[2], d, d_ff, dtype),
+        "ffn_up": init_dense(ks[3], d, d_ff, dtype),
+        "ffn_down": init_dense(ks[4], d_ff, d, dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "m": z, "h": z}
+
+
+def _slstm_cell(params, cfg, x_pre, state):
+    """One sLSTM step. x_pre: (B, 4d) input pre-activations (before recurrent
+    contribution); state dict of (B, d)."""
+    H, dh, _ = slstm_dims(cfg)
+    d = cfg.d_model
+    B_ = x_pre.shape[0]
+    hprev = state["h"].reshape(B_, H, dh)
+    rec = jnp.einsum("ghde,bhd->gbhe", params["r"], hprev).reshape(4, B_, d)
+    pre = x_pre.astype(jnp.float32) + \
+        jnp.concatenate([rec[0], rec[1], rec[2], rec[3]], axis=-1) + \
+        params["b"][None, :]
+    zp, ip, fp, op = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    log_f = jax.nn.log_sigmoid(fp)
+    m_new = jnp.maximum(log_f + state["m"], ip)
+    i_sc = jnp.exp(ip - m_new)
+    f_sc = jnp.exp(log_f + state["m"] - m_new)
+    c_new = f_sc * state["c"] + i_sc * z
+    n_new = f_sc * state["n"] + i_sc
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}
+
+
+def slstm_block_forward(params, cfg: ModelConfig, x: jnp.ndarray, state=None):
+    """x: (B, S, d_model) -> (y, state). Sequential scan over time."""
+    B_, S, d = x.shape
+    x_pre = dense(params["w_in"], x)                                # (B,S,4d)
+    st = state if state is not None else init_slstm_cache(cfg, B_)
+
+    def step(carry, xt):
+        new = _slstm_cell(params, cfg, xt, carry)
+        return new, new["h"]
+
+    st_f, hs = jax.lax.scan(step, st, x_pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)                       # (B,S,d)
+    h = rmsnorm(params["norm"], h, cfg.norm_eps)
+    y = dense(params["ffn_down"],
+              jax.nn.gelu(dense(params["ffn_gate"], h), approximate=True) *
+              dense(params["ffn_up"], h))
+    return y, st_f
+
+
+def slstm_block_decode(params, cfg: ModelConfig, x_t, cache):
+    x_pre = dense(params["w_in"], x_t)[:, 0, :]
+    st = _slstm_cell(params, cfg, x_pre, cache)
+    h = rmsnorm(params["norm"], st["h"][:, None, :].astype(x_t.dtype),
+                cfg.norm_eps)
+    y = dense(params["ffn_down"],
+              jax.nn.gelu(dense(params["ffn_gate"], h), approximate=True) *
+              dense(params["ffn_up"], h))
+    return y, st

@@ -1,0 +1,65 @@
+"""Loss functions.
+
+``chunked_ce`` computes LM cross-entropy by scanning over sequence chunks so
+the (B, S, vocab) logits tensor is never materialized — required at the
+assigned scales (e.g. qwen3 train_4k: 256×4096×151936 logits would be ~2.5 TB
+in f32 globally).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ce_chunk(hidden_chunk, table, head, labels_chunk, softcap):
+    """hidden (B,c,d) -> mean-able (sum_loss, count)."""
+    if table is not None:
+        logits = jnp.einsum("bcd,vd->bcv", hidden_chunk, table)
+    else:
+        logits = hidden_chunk @ head
+    logits = logits.astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_chunk[..., None],
+                               axis=-1)[..., 0]
+    mask = labels_chunk >= 0
+    loss = jnp.where(mask, lse - gold, 0.0)
+    return loss.sum(), mask.sum()
+
+
+def chunked_ce(hidden, params, cfg, labels, *, chunk: int = 512) -> jnp.ndarray:
+    """hidden: (B,S,d); labels: (B,S) int32, -1 = ignore. Scalar mean CE."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    while S % chunk:            # largest chunk <= requested that divides S
+        chunk -= 1
+    n = S // chunk
+    dt = jnp.dtype(cfg.compute_dtype)
+    table = params["embed"]["table"].astype(dt) if cfg.tie_embeddings else None
+    head = None if cfg.tie_embeddings else params["lm_head"]["w"].astype(dt)
+
+    hs = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, l = xs
+        s, c = _ce_chunk(h.astype(dt), table, head, l, cfg.final_logit_softcap)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.int32)), (hs, ls))
+    return tot / jnp.maximum(cnt, 1).astype(jnp.float32)
+
+
+def mse(pred, target) -> jnp.ndarray:
+    """Paper Eq. (5): mean squared forecasting error."""
+    return jnp.mean(jnp.square(pred.astype(jnp.float32) -
+                               target.astype(jnp.float32)))
+
+
+def mae(pred, target) -> jnp.ndarray:
+    return jnp.mean(jnp.abs(pred.astype(jnp.float32) -
+                            target.astype(jnp.float32)))

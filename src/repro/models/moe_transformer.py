@@ -1,0 +1,135 @@
+"""MoE decoder family: mixtral-8x7b (top-2, SWA) and qwen2-moe-a2.7b
+(4 shared + 60 routed, top-4).
+
+Identical trunk to the dense transformer, with the FFN replaced by the
+capacity-dispatched MoE block; the router aux loss threads through the layer
+scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.attention import (
+    attention, attn_decode, init_attention, init_attn_cache)
+from repro.models.layers.moe import init_moe, moe_block
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.models.transformer import (
+    BLOCK_KV, BLOCK_Q, BLOCKWISE_THRESHOLD, _seq_constraint, embed_tokens,
+    logits_fn)
+from repro.models.layers.embeddings import init_embedding
+from repro.models.layers.linear import init_dense
+
+
+def _init_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model),
+        "attn": init_attention(k1, cfg, dtype=dtype),
+        "moe_norm": init_rmsnorm(cfg.d_model),
+        "moe": init_moe(k2, cfg, dtype),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.num_layers)
+    p = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: _init_block(k, cfg, dtype))(keys),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_dense(kh, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = True):
+    """tokens (B,S) -> (final hidden, total aux loss)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_tokens(params, cfg, tokens)
+    blockwise = S >= BLOCKWISE_THRESHOLD
+    bq, bkv = (BLOCK_Q, BLOCK_KV) if blockwise else (0, 0)
+
+    def body(carry, lp):
+        h, aux = carry
+        a = attention(lp["attn"], cfg,
+                      rmsnorm(lp["attn_norm"], h, cfg.norm_eps),
+                      positions=positions, kind="causal",
+                      window=cfg.sliding_window, block_q=bq, block_kv=bkv)
+        h = h + a
+        m, aux_l = moe_block(lp["moe"], cfg,
+                             rmsnorm(lp["moe_norm"], h, cfg.norm_eps))
+        h = _seq_constraint(h + m)
+        return (h, aux + aux_l), None
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if remat else body
+    (x, aux), _ = jax.lax.scan(
+        body_fn, (_seq_constraint(x), jnp.zeros((), jnp.float32)),
+        params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               *, force_window: int = 0, dtype=jnp.bfloat16):
+    dh = cfg.resolved_head_dim()
+    w = force_window or cfg.sliding_window
+    cl = min(seq_len, w) if w > 0 else seq_len
+    return jax.vmap(lambda _: init_attn_cache(batch, cl, cfg.num_kv_heads,
+                                              dh, dtype))(
+        jnp.arange(cfg.num_layers))
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                force_window: int = 0):
+    x = embed_tokens(params, cfg, token)
+    w = force_window or cfg.sliding_window
+
+    def body(h, lp_cache):
+        lp, c = lp_cache
+        a, c2 = attn_decode(lp["attn"], cfg,
+                            rmsnorm(lp["attn_norm"], h, cfg.norm_eps),
+                            c, pos, window=w)
+        h = h + a
+        m, _ = moe_block(lp["moe"], cfg,
+                         rmsnorm(lp["moe_norm"], h, cfg.norm_eps))
+        return h + m, c2
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, force_window: int = 0,
+            cache_len: int = 0):
+    from repro.models.transformer import _scatter_ring
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_tokens(params, cfg, tokens)
+    blockwise = S >= BLOCKWISE_THRESHOLD
+    bq, bkv = (BLOCK_Q, BLOCK_KV) if blockwise else (0, 0)
+    w = force_window or cfg.sliding_window
+    total = max(S, cache_len)
+    cl = min(total, w) if w > 0 else total
+    cache_dtype = jnp.dtype(cfg.compute_dtype)
+
+    def body(h, lp):
+        a_in = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, (k, v) = attention(lp["attn"], cfg, a_in, positions=positions,
+                              kind="causal", window=w, block_q=bq,
+                              block_kv=bkv, return_kv=True)
+        c = _scatter_ring(k.astype(cache_dtype), v.astype(cache_dtype),
+                          positions, cl)
+        h = h + a
+        m, _ = moe_block(lp["moe"], cfg,
+                         rmsnorm(lp["moe_norm"], h, cfg.norm_eps))
+        return _seq_constraint(h + m), c
+
+    x, cache = jax.lax.scan(body, _seq_constraint(x), params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return cache, logits_fn(params, cfg, x[:, -1:, :])

@@ -1,0 +1,197 @@
+"""Unified model API: family dispatch for init / loss / prefill / decode.
+
+Every family exposes the same functional surface so the launcher, the
+federated trainer, and the dry-run don't care which architecture they're
+driving:
+
+  init(cfg, key)                          -> params
+  loss(params, cfg, batch)                -> scalar (LM cross-entropy + aux)
+  prefill(params, cfg, batch)             -> (cache, last logits)
+  decode_step(params, cfg, cache, batch)  -> (logits, cache)
+  init_cache(cfg, batch_size, seq_len, force_window) -> cache pytree
+
+Batch dicts:
+  dense/moe/ssm/hybrid: {"tokens": (B,S), "labels": (B,S)}
+  vlm:    {"patches": (B,P,vis_d), "tokens": (B,St), "labels": (B,St)}
+  encdec: {"frames": (B,F,d), "tokens": (B,S), "labels": (B,S)}
+  decode: {"token": (B,1), "pos": scalar}
+"""
+
+from __future__ import annotations
+
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import (encdec, moe_transformer, transformer, vlm,
+                          xlstm_model, zamba2)
+from repro.models.losses import chunked_ce
+
+
+def _dense_api():
+    def loss(params, cfg, batch):
+        h = transformer.forward(params, cfg, batch["tokens"])
+        return chunked_ce(h, params, cfg, batch["labels"])
+
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   force_window=force_window,
+                                   cache_len=cache_len)
+
+    def decode_step(params, cfg, cache, batch, *, force_window=0):
+        return transformer.decode_step(params, cfg, cache, batch["token"],
+                                       batch["pos"],
+                                       force_window=force_window)
+
+    return SimpleNamespace(init=transformer.init, loss=loss, prefill=prefill,
+                           decode_step=decode_step,
+                           init_cache=transformer.init_cache)
+
+
+def _moe_api():
+    def loss(params, cfg, batch):
+        h, aux = moe_transformer.forward(params, cfg, batch["tokens"])
+        return chunked_ce(h, params, cfg, batch["labels"]) + aux
+
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+        return moe_transformer.prefill(params, cfg, batch["tokens"],
+                                       force_window=force_window,
+                                       cache_len=cache_len)
+
+    def decode_step(params, cfg, cache, batch, *, force_window=0):
+        return moe_transformer.decode_step(params, cfg, cache,
+                                           batch["token"], batch["pos"],
+                                           force_window=force_window)
+
+    return SimpleNamespace(init=moe_transformer.init, loss=loss,
+                           prefill=prefill, decode_step=decode_step,
+                           init_cache=moe_transformer.init_cache)
+
+
+def _vlm_api():
+    def loss(params, cfg, batch):
+        h = vlm.forward(params, cfg, batch["patches"], batch["tokens"])
+        # predict only the text suffix
+        nI = cfg.vlm.num_image_tokens
+        h_txt = h[:, nI:, :]
+        return chunked_ce(h_txt, params, cfg, batch["labels"])
+
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+        return vlm.prefill(params, cfg, batch["patches"], batch["tokens"],
+                           force_window=force_window, cache_len=cache_len)
+
+    def decode_step(params, cfg, cache, batch, *, force_window=0):
+        return vlm.decode_step(params, cfg, cache, batch["token"],
+                               batch["pos"], force_window=force_window)
+
+    return SimpleNamespace(init=vlm.init, loss=loss, prefill=prefill,
+                           decode_step=decode_step,
+                           init_cache=vlm.init_cache)
+
+
+def _encdec_api():
+    def loss(params, cfg, batch):
+        h = encdec.forward(params, cfg, batch["frames"], batch["tokens"])
+        return chunked_ce(h, params, cfg, batch["labels"])
+
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+        return encdec.prefill(params, cfg, batch["frames"], batch["tokens"],
+                              force_window=force_window,
+                              cache_len=cache_len)
+
+    def decode_step(params, cfg, cache, batch, *, force_window=0):
+        return encdec.decode_step(params, cfg, cache, batch["token"],
+                                  batch["pos"], force_window=force_window)
+
+    return SimpleNamespace(init=encdec.init, loss=loss, prefill=prefill,
+                           decode_step=decode_step,
+                           init_cache=encdec.init_cache)
+
+
+def _ssm_api():
+    def loss(params, cfg, batch):
+        h = xlstm_model.forward(params, cfg, batch["tokens"])
+        return chunked_ce(h, params, cfg, batch["labels"])
+
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+        return xlstm_model.prefill(params, cfg, batch["tokens"],
+                                   force_window=force_window,
+                                   cache_len=cache_len)
+
+    def decode_step(params, cfg, cache, batch, *, force_window=0):
+        return xlstm_model.decode_step(params, cfg, cache, batch["token"],
+                                       batch["pos"],
+                                       force_window=force_window)
+
+    return SimpleNamespace(init=xlstm_model.init, loss=loss, prefill=prefill,
+                           decode_step=decode_step,
+                           init_cache=xlstm_model.init_cache)
+
+
+def _hybrid_api():
+    def loss(params, cfg, batch):
+        h = zamba2.forward(params, cfg, batch["tokens"])
+        return chunked_ce(h, params, cfg, batch["labels"])
+
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+        return zamba2.prefill(params, cfg, batch["tokens"],
+                              force_window=force_window,
+                              cache_len=cache_len)
+
+    def decode_step(params, cfg, cache, batch, *, force_window=0):
+        return zamba2.decode_step(params, cfg, cache, batch["token"],
+                                  batch["pos"], force_window=force_window)
+
+    return SimpleNamespace(init=zamba2.init, loss=loss, prefill=prefill,
+                           decode_step=decode_step,
+                           init_cache=zamba2.init_cache)
+
+
+_FAMILIES = {
+    "dense": _dense_api,
+    "moe": _moe_api,
+    "vlm": _vlm_api,
+    "encdec": _encdec_api,
+    "ssm": _ssm_api,
+    "hybrid": _hybrid_api,
+}
+
+
+def get_model(cfg: ModelConfig):
+    return _FAMILIES[cfg.family]()
+
+
+# ---------------------------------------------------------------------------
+# Batch construction (smoke tests + dry-run specs share these shapes)
+# ---------------------------------------------------------------------------
+
+def train_batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Shape/dtype tree for a training batch (as jax.ShapeDtypeStruct-able
+    (shape, dtype) tuples)."""
+    if cfg.family == "vlm":
+        nI = cfg.vlm.num_image_tokens
+        st = seq - nI
+        return {
+            "patches": ((batch, nI, cfg.vlm.vision_embed_dim), jnp.bfloat16),
+            "tokens": ((batch, st), jnp.int32),
+            "labels": ((batch, st), jnp.int32),
+        }
+    if cfg.family == "encdec":
+        F = min(seq, cfg.encdec.max_source_len)
+        return {
+            "frames": ((batch, F, cfg.d_model), jnp.bfloat16),
+            "tokens": ((batch, seq), jnp.int32),
+            "labels": ((batch, seq), jnp.int32),
+        }
+    return {
+        "tokens": ((batch, seq), jnp.int32),
+        "labels": ((batch, seq), jnp.int32),
+    }
+
+
+def decode_batch_shapes(cfg: ModelConfig, batch: int) -> dict:
+    return {
+        "token": ((batch, 1), jnp.int32),
+        "pos": ((), jnp.int32),
+    }

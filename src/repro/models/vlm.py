@@ -1,0 +1,97 @@
+"""VLM backbone (paligemma-3b): stub SigLIP patch embeddings -> linear
+projector -> gemma-style prefix-LM decoder.
+
+Vision tower carve-out per the assignment: patch embeddings arrive
+precomputed with shape (B, num_image_tokens, vision_embed_dim); we implement
+the projector + the language decoder with bidirectional attention over the
+image prefix and causal attention over the text suffix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.linear import dense, init_dense
+from repro.models import transformer as tfm
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    kv, kt = jax.random.split(key)
+    p = tfm.init(cfg, kt)
+    p["vis_proj"] = init_dense(kv, cfg.vlm.vision_embed_dim, cfg.d_model,
+                               jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def _merge(params, cfg: ModelConfig, patches, tokens):
+    """(B,P,vis_d) + (B,St) -> merged (B, P+St, d_model)."""
+    vis = dense(params["vis_proj"],
+                patches.astype(jnp.dtype(cfg.compute_dtype)))
+    txt = tfm.embed_tokens(params, cfg, tokens)
+    return jnp.concatenate([vis, txt], axis=1)
+
+
+def forward(params, cfg: ModelConfig, patches, tokens, *,
+            remat: bool = True):
+    """Prefix-LM forward. Returns final hidden over the merged sequence."""
+    x = _merge(params, cfg, patches, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    prefix = jnp.full((x.shape[0],), cfg.vlm.num_image_tokens, jnp.int32)
+    return tfm.forward_hidden(params, cfg, x, positions=positions,
+                              prefix_len=prefix, remat=remat)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               *, force_window: int = 0, dtype=jnp.bfloat16):
+    return tfm.init_cache(cfg, batch, seq_len, force_window=force_window,
+                          dtype=dtype)
+
+
+def prefill(params, cfg: ModelConfig, patches, tokens, *,
+            force_window: int = 0, cache_len: int = 0):
+    """Image + prompt prefill -> (cache, last logits).
+
+    Reuses the dense-transformer prefill on the merged embedding sequence
+    (prefix-LM mask over the image tokens).
+    """
+    from repro.models.layers.norms import rmsnorm
+    from repro.models.transformer import (
+        BLOCK_KV, BLOCK_Q, BLOCKWISE_THRESHOLD, _scatter_ring,
+        _seq_constraint, logits_fn)
+    from repro.models.layers.attention import attention
+    from repro.models.layers.mlp import mlp
+
+    x = _merge(params, cfg, patches, tokens)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    prefix = jnp.full((B,), cfg.vlm.num_image_tokens, jnp.int32)
+    bq, bkv = (BLOCK_Q, BLOCK_KV) if S >= BLOCKWISE_THRESHOLD else (0, 0)
+    w = force_window or cfg.sliding_window
+    total = max(S, cache_len)
+    cl = min(total, w) if w > 0 else total
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def body(h, lp):
+        a_in = rmsnorm(lp["attn_norm"], h, cfg.norm_eps)
+        a, (k, v) = attention(lp["attn"], cfg, a_in, positions=positions,
+                              kind="prefix", prefix_len=prefix, window=w,
+                              block_q=bq, block_kv=bkv, return_kv=True)
+        c = _scatter_ring(k.astype(cdt), v.astype(cdt), positions, cl)
+        h = h + a
+        h = h + mlp(lp["mlp"], rmsnorm(lp["mlp_norm"], h, cfg.norm_eps),
+                    cfg.activation)
+        return _seq_constraint(h), c
+
+    x, cache = jax.lax.scan(body, _seq_constraint(x), params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return cache, logits_fn(params, cfg, x[:, -1:, :])
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                force_window: int = 0):
+    prefix = jnp.full((token.shape[0],), cfg.vlm.num_image_tokens, jnp.int32)
+    return tfm.decode_step(params, cfg, cache, token, pos,
+                           force_window=force_window, prefix_len=prefix)

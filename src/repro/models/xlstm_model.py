@@ -1,0 +1,143 @@
+"""xLSTM language model (xlstm-350m): mLSTM blocks with periodic sLSTM.
+
+Layer pattern: every ``slstm_every``-th block is sLSTM, the rest mLSTM.
+Scanned as groups of (slstm_every - 1) mLSTM blocks + 1 sLSTM block so the
+whole stack lowers as two nested scans.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.embeddings import init_embedding
+from repro.models.layers.linear import init_dense
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.models.layers.xlstm import (
+    init_mlstm_block, init_mlstm_cache, init_slstm_block, init_slstm_cache,
+    mlstm_block_decode, mlstm_block_forward, slstm_block_decode,
+    slstm_block_forward)
+from repro.models.transformer import _seq_constraint, embed_tokens, logits_fn
+
+
+def _group_counts(cfg: ModelConfig):
+    k = cfg.xlstm.slstm_every
+    assert cfg.num_layers % k == 0, (cfg.num_layers, k)
+    return cfg.num_layers // k, k - 1        # (n_groups, mlstm per group)
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    nG, nM = _group_counts(cfg)
+    ke, km, ks, kh = jax.random.split(key, 4)
+    mkeys = jax.random.split(km, nG * nM).reshape(nG, nM, 2)
+    skeys = jax.random.split(ks, nG)
+    mlstm = jax.vmap(jax.vmap(lambda k: {
+        "norm": init_rmsnorm(cfg.d_model),
+        "block": init_mlstm_block(k, cfg, dtype)}))(mkeys)
+    slstm = jax.vmap(lambda k: {
+        "norm": init_rmsnorm(cfg.d_model),
+        "block": init_slstm_block(k, cfg, dtype)})(skeys)
+    p = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "mlstm": mlstm,                       # (nG, nM, ...)
+        "slstm": slstm,                       # (nG, ...)
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_dense(kh, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = True):
+    """tokens (B,S) -> final hidden (B,S,d)."""
+    x = embed_tokens(params, cfg, tokens)
+
+    def m_layer(h, lp):
+        y, _ = mlstm_block_forward(lp["block"], cfg,
+                                   rmsnorm(lp["norm"], h, cfg.norm_eps))
+        return _seq_constraint(h + y), None
+
+    def group(h, gp):
+        m_fn = jax.checkpoint(m_layer, prevent_cse=False) if remat else m_layer
+        h, _ = jax.lax.scan(m_fn, h, gp["mlstm"])
+        y, _ = slstm_block_forward(gp["slstm"]["block"], cfg,
+                                   rmsnorm(gp["slstm"]["norm"], h,
+                                           cfg.norm_eps))
+        return _seq_constraint(h + y), None
+
+    if remat:
+        group = jax.checkpoint(group, prevent_cse=False)
+    x, _ = jax.lax.scan(group, _seq_constraint(x),
+                        {"mlstm": params["mlstm"], "slstm": params["slstm"]})
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decode (constant-size recurrent state — long_500k runs natively)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               *, force_window: int = 0, dtype=jnp.bfloat16):
+    del seq_len, force_window                # state is O(1) in sequence length
+    nG, nM = _group_counts(cfg)
+    m = jax.vmap(jax.vmap(lambda _: init_mlstm_cache(cfg, batch, dtype)))(
+        jnp.arange(nG * nM).reshape(nG, nM))
+    s = jax.vmap(lambda _: init_slstm_cache(cfg, batch, dtype))(jnp.arange(nG))
+    return {"mlstm": m, "slstm": s}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                force_window: int = 0):
+    del pos, force_window
+    x = embed_tokens(params, cfg, token)
+
+    def m_layer(h, lp_cache):
+        lp, c = lp_cache
+        y, c2 = mlstm_block_decode(lp["block"], cfg,
+                                   rmsnorm(lp["norm"], h, cfg.norm_eps), c)
+        return h + y, c2
+
+    def group(h, gp_cache):
+        gp, gc = gp_cache
+        h, mc = jax.lax.scan(m_layer, h, (gp["mlstm"], gc["mlstm"]))
+        y, sc = slstm_block_decode(gp["slstm"]["block"], cfg,
+                                   rmsnorm(gp["slstm"]["norm"], h,
+                                           cfg.norm_eps), gc["slstm"])
+        return h + y, {"mlstm": mc, "slstm": sc}
+
+    x, new_cache = jax.lax.scan(
+        group, x,
+        ({"mlstm": params["mlstm"], "slstm": params["slstm"]}, cache))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, force_window: int = 0,
+            cache_len: int = 0):
+    """Run the recurrence over the prompt, materializing final states.
+
+    For recurrent models prefill == forward while carrying states; we re-run
+    the chunked forms with state threading.
+    """
+    del force_window, cache_len
+    x = embed_tokens(params, cfg, tokens)
+
+    def m_layer(h, lp):
+        y, st = mlstm_block_forward(lp["block"], cfg,
+                                    rmsnorm(lp["norm"], h, cfg.norm_eps),
+                                    return_cache=True)
+        return h + y, st
+
+    def group(h, gp):
+        h, m_states = jax.lax.scan(m_layer, h, gp["mlstm"])
+        y, s_state = slstm_block_forward(gp["slstm"]["block"], cfg,
+                                         rmsnorm(gp["slstm"]["norm"], h,
+                                                 cfg.norm_eps))
+        return h + y, {"mlstm": m_states, "slstm": s_state}
+
+    x, states = jax.lax.scan(
+        group, x, {"mlstm": params["mlstm"], "slstm": params["slstm"]})
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return states, logits_fn(params, cfg, x[:, -1:, :])

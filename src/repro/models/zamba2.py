@@ -1,0 +1,209 @@
+"""Zamba2 hybrid: Mamba2 backbone + weight-shared attention blocks.
+[arXiv:2411.15242]
+
+Every ``shared_attn_every`` Mamba2 layers, one of ``num_shared_blocks``
+(round-robin) weight-shared transformer blocks runs on the concatenation of
+the current hidden state and the original embedding (2·d_model input,
+d_model output) — Zamba2's signature "shared attention with embedding
+re-injection".  The shared block's weights are *reused* across all its
+applications; only the KV cache is per-application.
+
+FedTime interaction (DESIGN.md §4): the shared block carries the LoRA
+adapters — one adapter serves 9 applications, the smallest federated payload
+of all assigned archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.attention import (
+    attention, attn_decode, init_attention, init_attn_cache)
+from repro.models.layers.embeddings import init_embedding
+from repro.models.layers.linear import init_dense
+from repro.models.layers.mamba2 import (
+    init_mamba2, init_mamba2_cache, mamba2_decode, mamba2_forward)
+from repro.models.layers.mlp import init_mlp, mlp
+from repro.models.layers.norms import init_rmsnorm, rmsnorm
+from repro.models.transformer import (
+    BLOCK_KV, BLOCK_Q, BLOCKWISE_THRESHOLD, _seq_constraint, embed_tokens,
+    logits_fn)
+
+
+def _group_counts(cfg: ModelConfig):
+    k = cfg.hybrid.shared_attn_every
+    assert cfg.num_layers % k == 0, (cfg.num_layers, k)
+    return cfg.num_layers // k, k            # (n_groups, mamba per group)
+
+
+def _init_shared_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    d2 = 2 * cfg.d_model
+    return {
+        "attn_norm": init_rmsnorm(d2),
+        "attn": init_attention(k1, cfg, q_in=d2, kv_in=d2,
+                               out_dim=cfg.d_model, dtype=dtype),
+        "mlp_norm": init_rmsnorm(d2),
+        "mlp": init_mlp(k2, d2, cfg.d_ff, cfg.activation, dtype,
+                        out_dim=cfg.d_model),
+    }
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.param_dtype)
+    nG, nM = _group_counts(cfg)
+    ke, km, ks, kh = jax.random.split(key, 4)
+    mkeys = jax.random.split(km, nG * nM).reshape(nG, nM, 2)
+    skeys = jax.random.split(ks, cfg.hybrid.num_shared_blocks)
+    mamba = jax.vmap(jax.vmap(lambda k: {
+        "norm": init_rmsnorm(cfg.d_model),
+        "block": init_mamba2(k, cfg, dtype)}))(mkeys)
+    shared = jax.vmap(lambda k: _init_shared_block(k, cfg, dtype))(skeys)
+    p = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "mamba": mamba,                       # (nG, nM, ...)
+        "shared": shared,                     # (num_shared_blocks, ...)
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "lm_head": init_dense(kh, cfg.d_model, cfg.vocab_size, dtype),
+    }
+    return p
+
+
+def _select_shared(params, g_idx):
+    """Round-robin shared block: tree-select block (g_idx % n)."""
+    n = jax.tree.leaves(params["shared"])[0].shape[0]
+    sel = jnp.mod(g_idx, n)
+    return jax.tree.map(lambda a: a[sel], params["shared"])
+
+
+def forward(params, cfg: ModelConfig, tokens, *, remat: bool = True):
+    """tokens (B,S) -> final hidden (B,S,d)."""
+    x0 = embed_tokens(params, cfg, tokens)
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    bq, bkv = (BLOCK_Q, BLOCK_KV) if S >= BLOCKWISE_THRESHOLD else (0, 0)
+    nG, nM = _group_counts(cfg)
+
+    def m_layer(h, lp):
+        y, _ = mamba2_forward(lp["block"], cfg,
+                              rmsnorm(lp["norm"], h, cfg.norm_eps))
+        return _seq_constraint(h + y), None
+
+    def group(h, gp):
+        sp = _select_shared(params, gp["idx"])
+        a_in = jnp.concatenate([h, x0], axis=-1)
+        y = attention(sp["attn"], cfg,
+                      rmsnorm(sp["attn_norm"], a_in, cfg.norm_eps),
+                      positions=positions, kind="causal",
+                      block_q=bq, block_kv=bkv)
+        h = h + y
+        a_in = jnp.concatenate([h, x0], axis=-1)
+        h = h + mlp(sp["mlp"], rmsnorm(sp["mlp_norm"], a_in, cfg.norm_eps),
+                    cfg.activation)
+        m_fn = jax.checkpoint(m_layer, prevent_cse=False) if remat else m_layer
+        h, _ = jax.lax.scan(m_fn, _seq_constraint(h), gp["mamba"])
+        return h, None
+
+    if remat:
+        group = jax.checkpoint(group, prevent_cse=False)
+    x, _ = jax.lax.scan(group, _seq_constraint(x0),
+                        {"mamba": params["mamba"],
+                         "idx": jnp.arange(nG, dtype=jnp.int32)})
+    return rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               *, force_window: int = 0, dtype=jnp.bfloat16):
+    del force_window                          # attention here is always global
+    nG, nM = _group_counts(cfg)
+    dh = cfg.resolved_head_dim()
+    m = jax.vmap(jax.vmap(lambda _: init_mamba2_cache(cfg, batch, dtype)))(
+        jnp.arange(nG * nM).reshape(nG, nM))
+    attn_c = jax.vmap(lambda _: init_attn_cache(batch, seq_len,
+                                                cfg.num_kv_heads, dh, dtype))(
+        jnp.arange(nG))
+    return {"mamba": m, "attn": attn_c}
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
+                force_window: int = 0):
+    del force_window
+    x0 = embed_tokens(params, cfg, token)
+    nG, nM = _group_counts(cfg)
+
+    def m_layer(h, lp_cache):
+        lp, c = lp_cache
+        y, c2 = mamba2_decode(lp["block"], cfg,
+                              rmsnorm(lp["norm"], h, cfg.norm_eps), c)
+        return h + y, c2
+
+    def group(h, gp_cache):
+        gp, gc = gp_cache
+        sp = _select_shared(params, gp["idx"])
+        a_in = jnp.concatenate([h, x0], axis=-1)
+        y, ac = attn_decode(sp["attn"], cfg,
+                            rmsnorm(sp["attn_norm"], a_in, cfg.norm_eps),
+                            gc["attn"], pos, window=0)
+        h = h + y
+        a_in = jnp.concatenate([h, x0], axis=-1)
+        h = h + mlp(sp["mlp"], rmsnorm(sp["mlp_norm"], a_in, cfg.norm_eps),
+                    cfg.activation)
+        h, mc = jax.lax.scan(m_layer, h, (gp["mamba"], gc["mamba"]))
+        return h, {"mamba": mc, "attn": ac}
+
+    x, new_cache = jax.lax.scan(
+        group, x0,
+        ({"mamba": params["mamba"], "idx": jnp.arange(nG, dtype=jnp.int32)},
+         {"mamba": cache["mamba"], "attn": cache["attn"]}))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return logits_fn(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, force_window: int = 0,
+            cache_len: int = 0):
+    """Prompt prefill: chunked forward threading SSM states + attn KV."""
+    del force_window
+    from repro.models.transformer import _scatter_ring
+    x0 = embed_tokens(params, cfg, tokens)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    bq, bkv = (BLOCK_Q, BLOCK_KV) if S >= BLOCKWISE_THRESHOLD else (0, 0)
+    nG, nM = _group_counts(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    total = max(S, cache_len)
+    zero = init_cache(cfg, B, total, dtype=cdt)
+
+    def m_layer(h, lp):
+        y, st = mamba2_forward(lp["block"], cfg,
+                               rmsnorm(lp["norm"], h, cfg.norm_eps),
+                               return_cache=True)
+        return _seq_constraint(h + y), st
+
+    def group(h, gp):
+        sp = _select_shared(params, gp["idx"])
+        a_in = jnp.concatenate([h, x0], axis=-1)
+        y, (k, v) = attention(sp["attn"], cfg,
+                              rmsnorm(sp["attn_norm"], a_in, cfg.norm_eps),
+                              positions=positions, kind="causal",
+                              block_q=bq, block_kv=bkv, return_kv=True)
+        ac = _scatter_ring(k.astype(cdt), v.astype(cdt), positions, total)
+        h = h + y
+        a_in = jnp.concatenate([h, x0], axis=-1)
+        h = h + mlp(sp["mlp"], rmsnorm(sp["mlp_norm"], a_in, cfg.norm_eps),
+                    cfg.activation)
+        h, m_states = jax.lax.scan(m_layer, h, gp["mamba"])
+        return h, {"mamba": m_states, "attn": ac}
+
+    x, st = jax.lax.scan(group, _seq_constraint(x0),
+                         {"mamba": params["mamba"],
+                          "idx": jnp.arange(nG, dtype=jnp.int32)})
+    del zero
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    cache = {"mamba": st["mamba"], "attn": st["attn"]}
+    return cache, logits_fn(params, cfg, x[:, -1:, :])

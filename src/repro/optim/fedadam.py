@@ -1,0 +1,49 @@
+"""FedAdam — adaptive *server-side* federated optimization (Reddi et al.,
+ICLR 2021), as used by the paper to update QLoRA parameters.
+
+The server treats the (weighted) average client delta as a pseudo-gradient
+and applies Adam to the global model:
+
+    Δ_t   = Σ_s w_s (θ_s - θ_global) / Σ_s w_s
+    m_t   = β1 m_{t-1} + (1-β1) Δ_t
+    v_t   = β2 v_{t-1} + (1-β2) Δ_t²
+    θ_t+1 = θ_t + η m_t / (√v_t + τ)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fedadam_init(global_tree):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+    return {"m": jax.tree.map(zeros, global_tree),
+            "v": jax.tree.map(zeros, global_tree)}
+
+
+def fedadam_update(global_tree, avg_delta, state, *, lr=1e-2, b1=0.9,
+                   b2=0.99, tau=1e-3):
+    m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d.astype(jnp.float32),
+                     state["m"], avg_delta)
+    v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) *
+                     jnp.square(d.astype(jnp.float32)),
+                     state["v"], avg_delta)
+    new = jax.tree.map(
+        lambda p, m_, v_: (p.astype(jnp.float32) +
+                           lr * m_ / (jnp.sqrt(v_) + tau)).astype(p.dtype),
+        global_tree, m, v)
+    return new, {"m": m, "v": v}
+
+
+def fedavg(client_trees, weights):
+    """Plain weighted averaging (McMahan et al.). weights: (S,) array."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        out = jnp.tensordot(w, stacked, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *client_trees)

@@ -1,0 +1,64 @@
+"""Token sampling: greedy / temperature / top-k / top-p (nucleus).
+
+Pure functions over logits (B, V) so they compose with any family's
+decode_step under jit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG = jnp.finfo(jnp.float32).min
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(key, logits: jnp.ndarray, *, temperature: float = 1.0,
+           top_k: int = 0, top_p: float = 0.0) -> jnp.ndarray:
+    """logits (B, V) -> tokens (B,)."""
+    logits = logits.astype(jnp.float32)
+    if temperature <= 0.0:
+        return greedy(logits)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, _NEG, logits)
+    if top_p > 0.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest logit value still inside the nucleus
+        keep = cum - probs < top_p                  # first token always kept
+        cutoff = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits < cutoff, _NEG, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def generate(api, params, cfg, cache, first_token, *, steps: int,
+             start_pos: int, key=None, temperature: float = 0.0,
+             top_k: int = 0, top_p: float = 0.0, force_window: int = 0):
+    """Autoregressive generation loop (lax.scan — jit-able end to end).
+
+    first_token: (B, 1) int32 from prefill. Returns (tokens (B, steps),
+    final cache)."""
+    B = first_token.shape[0]
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    def step(carry, i):
+        tok, cache, k = carry
+        logits, cache = api.decode_step(
+            params, cfg, cache, {"token": tok, "pos": start_pos + i},
+            force_window=force_window)
+        k, sub = jax.random.split(k)
+        nxt = sample(sub, logits[:, -1, :], temperature=temperature,
+                     top_k=top_k, top_p=top_p)[:, None]
+        return (nxt, cache, k), nxt[:, 0]
+
+    (_, cache, _), toks = jax.lax.scan(
+        step, (first_token, cache, key),
+        jnp.arange(steps, dtype=jnp.int32))
+    return toks.T, cache                          # (B, steps)

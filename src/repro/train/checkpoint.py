@@ -1,0 +1,84 @@
+"""Checkpointing: msgpack + zstd of flattened parameter pytrees (no orbax).
+
+Arrays are stored as (dtype, shape, raw bytes); tree structure as the
+key-path list — restores bit-exactly, works for any of the framework's
+pytrees (params, adapters, optimizer states, caches).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten_with_paths(tree, prefix=""):
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out += _flatten_with_paths(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _flatten_with_paths(v, f"{prefix}/[{i}]")
+    else:
+        out.append((prefix, tree))
+    return out
+
+
+def save(path: str, tree: Any) -> int:
+    """Returns bytes written."""
+    leaves = _flatten_with_paths(tree)
+    payload = {}
+    for p, leaf in leaves:
+        arr = np.asarray(leaf)
+        payload[p] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "data": arr.tobytes()}
+    raw = msgpack.packb(payload, use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(comp)
+    return len(comp)
+
+
+def load(path: str, like: Any = None) -> Any:
+    with open(path, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    arrays = {p: jnp.asarray(np.frombuffer(v["data"],
+                                           dtype=np.dtype(v["dtype"]))
+                             .reshape(v["shape"]))
+              for p, v in payload.items()}
+    if like is None:
+        return _unflatten(arrays)
+    flat = _flatten_with_paths(like)
+    leaves = [arrays[p] for p, _ in flat]
+    paths = [p for p, _ in flat]
+    return _rebuild(like, dict(zip(paths, leaves)))
+
+
+def _unflatten(arrays: dict) -> dict:
+    root: dict = {}
+    for path, arr in arrays.items():
+        parts = [p for p in path.split("/") if p]
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return root
+
+
+def _rebuild(like, mapping, prefix=""):
+    if isinstance(like, dict):
+        return {k: _rebuild(v, mapping, f"{prefix}/{k}")
+                for k, v in like.items()}
+    if isinstance(like, (list, tuple)):
+        t = type(like)
+        return t(_rebuild(v, mapping, f"{prefix}/[{i}]")
+                 for i, v in enumerate(like))
+    return mapping[prefix]

@@ -1,0 +1,211 @@
+"""Federated training orchestration — paper Algorithm 1 end-to-end.
+
+Phases (paper §3.2):
+  0. K-means clustering of clients on local-data statistics.
+  1. Supervised fine-tuning (SFT), federated, instance-norm front end.
+  2. DPO alignment on preference pairs (server-side, post-SFT).
+  3. Forecasting fine-tuning, federated, RevIN front end.
+
+Only LoRA adapters cross the "network"; every round's traffic is metered by
+``repro.core.comm`` (C5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import comm, dpo, fedtime
+from repro.core.client import local_update
+from repro.core.clustering import cluster_clients
+from repro.core.lora import (FAMILY_TARGETS, attach_lora, lora_tree,
+                             merge_lora, quantize_base, trainable_fraction)
+from repro.core.server import ClusterServer
+from repro.data.federated import client_weights
+from repro.optim.fedadam import fedavg
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    cluster: int
+    train_loss: float
+    comm: comm.RoundStats
+
+
+@dataclasses.dataclass
+class FedResult:
+    adapters_per_cluster: list
+    base_params: dict
+    logs: List[RoundLog]
+    assignments: np.ndarray
+    trainable_frac: float
+
+    def total_megabytes(self) -> float:
+        return sum(l.comm.megabytes for l in self.logs)
+
+    def params_for_cluster(self, c: int) -> dict:
+        return merge_lora(self.base_params, self.adapters_per_cluster[c])
+
+
+def _stack_batches(x: np.ndarray, y: np.ndarray, steps: int, batch: int,
+                   seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    sel = rng.integers(0, len(x), (steps, batch))
+    return {"x": jnp.asarray(x[sel]), "y": jnp.asarray(y[sel])}
+
+
+def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
+                  batch_size: int = 16, key=None, phase: str = "forecast",
+                  loss_fn: Optional[Callable] = None,
+                  base_params: Optional[dict] = None,
+                  init_adapters: Optional[dict] = None,
+                  straggler_prob: float = 0.0,
+                  secure_aggregation: bool = False,
+                  progress: Optional[Callable[[str], None]] = None
+                  ) -> FedResult:
+    """client_data: list of (x (n,L,M), y (n,T,M)) per client."""
+    ft = cfg.fedtime
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k_init, k_lora, k_cl = jax.random.split(key, 3)
+
+    M = client_data[0][0].shape[-1]
+    if base_params is None:
+        base_params = fedtime.init(cfg, k_init, num_channels=M)
+    targets = FAMILY_TARGETS["dense"]
+    params = attach_lora(base_params, k_lora, rank=ft.lora_rank,
+                         alpha=ft.lora_alpha, targets=targets)
+    if ft.qlora:
+        params = quantize_base(params, qblock=ft.qlora_block,
+                               targets=targets)
+    if init_adapters is not None:
+        params = merge_lora(params, init_adapters)   # warm start (phase hand-off)
+    frac = trainable_fraction(params)
+    adapters0 = lora_tree(params)
+
+    # --- step 0: K-means clustering (paper Algorithm 1, line 3) ---
+    series = [np.asarray(x).reshape(-1, x.shape[-1] * x.shape[-2])[:256]
+              for x, _ in client_data]
+    assign, _, _ = cluster_clients(series, ft.num_clusters, key=k_cl)
+    assign = np.asarray(assign)
+    weights_all = client_weights(client_data)
+
+    if loss_fn is None:
+        def loss_fn(p, batch):  # noqa: F811
+            return fedtime.loss(p, cfg, batch, phase=phase)
+
+    servers = [ClusterServer(adapters0) for _ in range(ft.num_clusters)]
+    logs: List[RoundLog] = []
+    rng = np.random.default_rng(7)
+
+    for r in range(rounds):
+        for c in range(ft.num_clusters):
+            members = np.where(assign == c)[0]
+            if len(members) == 0:
+                continue
+            take = min(ft.clients_per_round, len(members))
+            sel = rng.choice(members, take, replace=False)
+            # systems heterogeneity (paper §1): stragglers miss the round
+            # deadline and are excluded from aggregation
+            if straggler_prob > 0:
+                alive = sel[rng.random(len(sel)) >= straggler_prob]
+                if len(alive) == 0:
+                    alive = sel[:1]               # quorum of one
+            else:
+                alive = sel
+            updates, losses, ws = [], [], []
+            for s in alive:
+                x, y = client_data[s]
+                batches = _stack_batches(x, y, ft.local_steps, batch_size,
+                                         seed=1000 * r + int(s))
+                ad, l = local_update(loss_fn, params, servers[c].adapters,
+                                     batches, steps=ft.local_steps)
+                updates.append(ad)
+                losses.append(float(l))
+                ws.append(weights_all[s])
+            if secure_aggregation:
+                # pairwise masking: server only sees the masked sum
+                from repro.core.secure_agg import mask_update
+                parts = [int(s) for s in alive]
+                w = np.asarray(ws, np.float32)
+                w = w / w.sum()
+                n_alive = len(parts)
+                # pre-scale by n·w_i so the server's (1/n)-normalized sum
+                # recovers Σ w_i·u_i with masks cancelling exactly
+                updates = [
+                    mask_update(
+                        jax.tree.map(lambda a, s=w[i] * n_alive: a * s, u),
+                        client_id=parts[i], participants=parts, round_idx=r)
+                    for i, u in enumerate(updates)]
+                ws = np.ones(n_alive, np.float32)
+            take = len(alive)
+            servers[c].aggregate(updates, np.asarray(ws))
+            stats = comm.fedtime_round(
+                params, clients_per_round=take,
+                num_clusters=ft.num_clusters)
+            logs.append(RoundLog(r, c, float(np.mean(losses)), stats))
+            if progress:
+                progress(f"round {r} cluster {c}: "
+                         f"loss={np.mean(losses):.4f} "
+                         f"comm={stats.megabytes:.2f}MB")
+
+    return FedResult([s.adapters for s in servers], params, logs,
+                     assign, frac)
+
+
+# ---------------------------------------------------------------------------
+# Two-phase pipeline with DPO alignment (paper Fig. 1a)
+# ---------------------------------------------------------------------------
+
+def two_phase_fit(cfg: ModelConfig, client_data, *, rounds_sft: int = 2,
+                  rounds_forecast: int = 3, dpo_steps: int = 20,
+                  batch_size: int = 16, key=None, progress=None):
+    """SFT (instance norm) -> DPO alignment -> forecasting FT (RevIN)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    # Phase 1: supervised fine-tuning
+    res_sft = federated_fit(cfg, client_data, rounds=rounds_sft,
+                            batch_size=batch_size, key=k1, phase="sft",
+                            progress=progress)
+
+    # Global consolidation: average cluster adapters for the DPO stage
+    global_ad = fedavg(res_sft.adapters_per_cluster,
+                       jnp.ones(len(res_sft.adapters_per_cluster)))
+    params = merge_lora(res_sft.base_params, global_ad)
+
+    # Phase 1.5: DPO alignment (server-side, synthetic preference pairs)
+    ref_params = params
+    x_all = np.concatenate([x[:8] for x, _ in client_data])[:batch_size]
+    y_all = np.concatenate([y[:8] for _, y in client_data])[:batch_size]
+    pairs = dpo.make_preference_pairs(k2, jnp.asarray(x_all),
+                                      jnp.asarray(y_all))
+
+    def dpo_loss_fn(p, batch):
+        return dpo.dpo_loss(p, ref_params, cfg, batch,
+                            beta=cfg.fedtime.dpo_beta)
+
+    pairs_stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (dpo_steps,) + a.shape), pairs)
+    aligned_ad, dpo_l = local_update(dpo_loss_fn, params, global_ad,
+                                     pairs_stacked, steps=dpo_steps,
+                                     lr=1e-4)
+    if progress:
+        progress(f"DPO alignment loss={float(dpo_l):.4f}")
+    params = merge_lora(params, aligned_ad)
+
+    # Phase 2: forecasting fine-tuning (RevIN), warm-started with the
+    # SFT+DPO adapters (paper: "transfer the updated weights of the
+    # backbone model to the forecasting fine-tuning phase")
+    res = federated_fit(cfg, client_data, rounds=rounds_forecast,
+                        batch_size=batch_size, key=k3, phase="forecast",
+                        base_params=res_sft.base_params,
+                        init_adapters=lora_tree(params), progress=progress)
+    res.logs = res_sft.logs + res.logs
+    return res

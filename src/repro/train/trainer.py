@@ -1,0 +1,69 @@
+"""Centralized trainer — the paper's comparison point (Fig. 3 'centralized
+LLaMA') and the generic single-host training loop used by examples."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedules import cosine_warmup
+
+
+@dataclasses.dataclass
+class TrainLog:
+    step: int
+    loss: float
+    seconds: float
+
+
+def fit(loss_fn: Callable, params, batch_iter, *, steps: int,
+        lr: float = 1e-3, warmup: int = 10, mask=None,
+        eval_fn: Optional[Callable] = None, eval_every: int = 50,
+        progress: Optional[Callable[[str], None]] = None):
+    """Generic jitted training loop.
+
+    loss_fn(params, batch) -> scalar; batch_iter yields pytrees of np/jnp.
+    Returns (params, List[TrainLog], eval_history).
+    """
+    opt = adamw_init(params)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def step_fn(p, o, batch, i):
+        l, g = grad_fn(p, batch)
+        lr_i = cosine_warmup(i, base_lr=lr, warmup=warmup, total=steps)
+        p, o = adamw_update(p, g, o, i + 1, lr=lr_i, mask=mask)
+        return p, o, l
+
+    logs: List[TrainLog] = []
+    evals = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = next(batch_iter)
+        batch = jax.tree.map(jnp.asarray, batch)
+        params, opt, l = step_fn(params, opt, batch, i)
+        logs.append(TrainLog(i, float(l), time.time() - t0))
+        if eval_fn is not None and (i + 1) % eval_every == 0:
+            evals.append((i, eval_fn(params)))
+        if progress and (i + 1) % max(steps // 10, 1) == 0:
+            progress(f"step {i + 1}/{steps} loss={float(l):.4f}")
+    return params, logs, evals
+
+
+def evaluate_forecaster(forward_fn, params, x_test: np.ndarray,
+                        y_test: np.ndarray, *, batch: int = 64):
+    """MSE / MAE over a test window set (paper's Table 2/3 metrics)."""
+    preds = []
+    fwd = jax.jit(forward_fn)
+    for i in range(0, len(x_test), batch):
+        preds.append(np.asarray(fwd(params, jnp.asarray(x_test[i:i + batch]))))
+    pred = np.concatenate(preds)[:len(y_test)]
+    err = pred - y_test
+    return {"mse": float(np.mean(err ** 2)),
+            "mae": float(np.mean(np.abs(err)))}

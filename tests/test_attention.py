@@ -1,0 +1,131 @@
+"""Attention unit tests: blockwise == naive, sliding window, GQA, prefix-LM,
+ring-buffer decode parity with full-sequence forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.layers.attention import (attention, attn_decode,
+                                           init_attention, init_attn_cache,
+                                           sdpa)
+
+
+def _qkv(B=2, S=64, H=4, Hk=2, D=32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, Hk, D))
+    v = jax.random.normal(ks[2], (B, S, Hk, D))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    return q, k, v, pos
+
+
+def test_blockwise_equals_naive_causal():
+    q, k, v, pos = _qkv(S=128)
+    out_naive = sdpa(q, k, v, q_pos=pos, kv_pos=pos, kind="causal")
+    out_block = sdpa(q, k, v, q_pos=pos, kv_pos=pos, kind="causal",
+                     block_q=32, block_kv=32)
+    np.testing.assert_allclose(np.asarray(out_naive), np.asarray(out_block),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_equals_naive_sliding_window():
+    q, k, v, pos = _qkv(S=128, seed=1)
+    kw = dict(q_pos=pos, kv_pos=pos, kind="causal", window=16)
+    out_naive = sdpa(q, k, v, **kw)
+    out_block = sdpa(q, k, v, block_q=32, block_kv=32, **kw)
+    np.testing.assert_allclose(np.asarray(out_naive), np.asarray(out_block),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blockwise_equals_naive_prefix():
+    q, k, v, pos = _qkv(S=64, seed=2)
+    pl = jnp.asarray([16, 32])
+    kw = dict(q_pos=pos, kv_pos=pos, kind="prefix", prefix_len=pl)
+    out_naive = sdpa(q, k, v, **kw)
+    out_block = sdpa(q, k, v, block_q=16, block_kv=16, **kw)
+    np.testing.assert_allclose(np.asarray(out_naive), np.asarray(out_block),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sliding_window_masks_far_tokens():
+    """A key far outside the window must not influence the output."""
+    q, k, v, pos = _qkv(S=64, seed=3)
+    out1 = sdpa(q, k, v, q_pos=pos, kv_pos=pos, kind="causal", window=8)
+    v2 = v.at[:, 0].set(v[:, 0] + 100.0)     # perturb position 0
+    out2 = sdpa(q, k, v2, q_pos=pos, kv_pos=pos, kind="causal", window=8)
+    # rows >= 8 can't see position 0
+    np.testing.assert_allclose(np.asarray(out1[:, 8:]),
+                               np.asarray(out2[:, 8:]), rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(out1[:, 0]), np.asarray(out2[:, 0]))
+
+
+def test_softcap_bounds_scores():
+    """With softcap, extreme logits cannot saturate: output must differ
+    from the uncapped result but stay finite."""
+    q, k, v, pos = _qkv(S=32, seed=4)
+    big_q = q * 100.0
+    out_cap = sdpa(big_q, k, v, q_pos=pos, kv_pos=pos, kind="causal",
+                   softcap=20.0)
+    out_nocap = sdpa(big_q, k, v, q_pos=pos, kv_pos=pos, kind="causal")
+    assert np.all(np.isfinite(np.asarray(out_cap)))
+    assert not np.allclose(np.asarray(out_cap), np.asarray(out_nocap))
+
+
+def test_decode_matches_full_forward():
+    """Ring-buffer decode must reproduce the full-sequence attention,
+    token by token (global cache, GQA + qk-norm + RoPE)."""
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = init_attention(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    full = attention(params, cfg, x, positions=pos, kind="causal")
+
+    cache = init_attn_cache(B, S, cfg.num_kv_heads, cfg.resolved_head_dim(),
+                            dtype=jnp.float32)
+    for t in range(S):
+        y_t, cache = attn_decode(params, cfg, x[:, t:t + 1], cache,
+                                 jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_decode_ring_buffer_sliding_window():
+    """Decode with a ring cache of size W must match full-sequence SWA."""
+    cfg = get_smoke_config("mixtral-8x7b").replace(sliding_window=8)
+    params = init_attention(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    B, S, W = 1, 24, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    full = attention(params, cfg, x, positions=pos, kind="causal", window=W)
+
+    cache = init_attn_cache(B, W, cfg.num_kv_heads, cfg.resolved_head_dim(),
+                            dtype=jnp.float32)
+    for t in range(S):
+        y_t, cache = attn_decode(params, cfg, x[:, t:t + 1], cache,
+                                 jnp.asarray(t, jnp.int32), window=W)
+        np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=2e-4, atol=2e-4,
+                                   err_msg=f"t={t}")
+
+
+def test_gqa_reduces_to_mha_when_heads_equal():
+    """GQA with Hk == H must equal plain MHA math (sanity on grouping)."""
+    B, S, H, D = 1, 16, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = sdpa(q, k, v, q_pos=pos, kv_pos=pos, kind="causal")
+    # manual reference
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * D ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,143 @@
+"""Federated-core invariants (paper C3/C5): aggregation properties,
+clustering, communication accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import comm
+from repro.core.clustering import client_features, cluster_clients, kmeans
+from repro.core.lora import lora_tree, tree_nbytes
+from repro.core.server import ClusterServer
+from repro.optim.fedadam import fedadam_init, fedadam_update, fedavg
+
+
+# ---------------------------------------------------------------------------
+# FedAvg properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.lists(st.floats(0.1, 10.0), min_size=2,
+                                   max_size=6))
+def test_fedavg_is_convex_combination(n_clients, raw_w):
+    """Aggregate must lie inside the convex hull of client values
+    (component-wise between min and max), and weights must normalize."""
+    n = min(n_clients, len(raw_w))
+    w = np.asarray(raw_w[:n], np.float32)
+    trees = [{"a": jnp.full((3,), float(i)), "b": {"c": jnp.asarray([i * 2.0])}}
+             for i in range(n)]
+    agg = fedavg(trees, w)
+    vals = np.asarray([float(i) for i in range(n)])
+    lo, hi = vals.min(), vals.max()
+    assert np.all(np.asarray(agg["a"]) >= lo - 1e-5)
+    assert np.all(np.asarray(agg["a"]) <= hi + 1e-5)
+    expect = float((vals * w).sum() / w.sum())
+    np.testing.assert_allclose(np.asarray(agg["a"]), expect, rtol=1e-5)
+
+
+def test_fedavg_identity_with_equal_trees():
+    t = {"x": jnp.asarray([1.0, 2.0])}
+    agg = fedavg([t, t, t], jnp.asarray([1.0, 5.0, 0.5]))
+    np.testing.assert_allclose(np.asarray(agg["x"]), [1.0, 2.0], rtol=1e-6)
+
+
+def test_fedadam_moves_toward_clients():
+    g = {"x": jnp.zeros((4,))}
+    state = fedadam_init(g)
+    delta = {"x": jnp.ones((4,))}
+    g2, state = fedadam_update(g, delta, state, lr=0.1)
+    assert np.all(np.asarray(g2["x"]) > 0), "server must move toward delta"
+
+
+def test_cluster_server_round():
+    ad0 = {"l": {"lora_a": jnp.zeros((4, 2)), "lora_b": jnp.zeros((2, 4))}}
+    srv = ClusterServer(ad0, lr=0.5)
+    ups = [jax.tree.map(lambda a: a + 1.0, ad0),
+           jax.tree.map(lambda a: a + 3.0, ad0)]
+    out = srv.aggregate(ups, [1.0, 1.0])
+    assert srv.round == 1
+    assert np.all(np.asarray(out["l"]["lora_a"]) > 0)
+
+
+# ---------------------------------------------------------------------------
+# K-means clustering
+# ---------------------------------------------------------------------------
+
+def test_kmeans_separates_obvious_clusters():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 0.2, (20, 3))
+    b = rng.normal(5, 0.2, (20, 3))
+    X = jnp.asarray(np.concatenate([a, b]), jnp.float32)
+    assign, centers, inertia = kmeans(X, 2, key=jax.random.PRNGKey(0))
+    assign = np.asarray(assign)
+    assert len(set(assign[:20])) == 1
+    assert len(set(assign[20:])) == 1
+    assert assign[0] != assign[-1]
+
+
+def test_client_features_shape_and_standardization():
+    series = [np.random.default_rng(i).normal(i, 1 + i, (100 + 10 * i, 2))
+              for i in range(5)]
+    X = client_features(series)
+    assert X.shape == (5, 5)
+    np.testing.assert_allclose(np.asarray(X).mean(0), 0.0, atol=1e-4)
+
+
+def test_cluster_clients_end_to_end():
+    rng = np.random.default_rng(1)
+    series = [rng.normal(0, 1, (64, 3)) for _ in range(6)] + \
+             [rng.normal(50, 5, (64, 3)) for _ in range(6)]
+    assign, _, _ = cluster_clients(series, 2)
+    assign = np.asarray(assign)
+    assert len(np.unique(assign)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (C5)
+# ---------------------------------------------------------------------------
+
+def _adapted_params():
+    from repro.configs import get_smoke_config
+    from repro.core.lora import attach_lora
+    from repro.models.registry import get_model
+    cfg = get_smoke_config("qwen3-0.6b")
+    api = get_model(cfg)
+    return attach_lora(api.init(cfg, jax.random.PRNGKey(0)),
+                       jax.random.PRNGKey(1), rank=4, alpha=8.0)
+
+
+def test_comm_bytes_equal_adapter_bytes_exactly():
+    """The metered payload must be EXACTLY the LoRA pytree size — nothing
+    more leaves the device (the paper's core comm claim)."""
+    params = _adapted_params()
+    payload = tree_nbytes(lora_tree(params))
+    stats = comm.fedtime_round(params, clients_per_round=3, num_clusters=2)
+    assert stats.bytes_up == payload * 3
+    assert stats.bytes_down == payload * 3
+
+
+def test_fedtime_vs_full_model_overhead():
+    params = _adapted_params()
+    ft = comm.fedtime_round(params, clients_per_round=4, num_clusters=2)
+    full = comm.fed_full_round(params, clients_per_round=4, num_clusters=2)
+    assert full.bytes_up > 5 * ft.bytes_up, \
+        "LoRA federation must be far cheaper than full-model FedAvg"
+    assert full.time_s > ft.time_s
+
+
+def test_centralized_data_shipping_dwarfs_fedtime():
+    params = _adapted_params()
+    ft = comm.fedtime_round(params, clients_per_round=8, num_clusters=2)
+    cen = comm.centralized_epoch(num_samples=10_000, lookback=512,
+                                 horizon=96, channels=21, num_clients=8)
+    assert cen.bytes_up > ft.bytes_up
+
+
+def test_collective_bytes_ring_formula():
+    params = _adapted_params()
+    out = comm.collective_bytes_per_round(params, {"data": 16, "model": 16})
+    payload = tree_nbytes(lora_tree(params))
+    assert out["data"] == int(2 * payload * 15 / 16)
+    assert out["pod"] == 0

@@ -1,0 +1,98 @@
+"""Pallas kernel validation: shape/dtype sweeps, assert_allclose vs the
+pure-jnp oracles in repro.kernels.ref (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import nf4_quantize
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.qlora_matmul import qlora_matmul
+from repro.kernels.rmsnorm import rmsnorm
+
+
+@pytest.mark.parametrize("M,K,N", [(64, 128, 128), (128, 256, 256),
+                                   (256, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qlora_matmul_sweep(M, K, N, dtype):
+    qb = 64
+    k0 = jax.random.PRNGKey(M + K + N)
+    ks = jax.random.split(k0, 4)
+    w = jax.random.normal(ks[0], (K, N)) * 0.05
+    wq, am = nf4_quantize(w, qb)
+    am2 = am.reshape(K, N // qb)
+    x = (jax.random.normal(ks[1], (M, K)) * 0.5).astype(dtype)
+    r = 8
+    a = (jax.random.normal(ks[2], (K, r)) * 0.1).astype(jnp.float32)
+    b = (jax.random.normal(ks[3], (r, N)) * 0.1).astype(jnp.float32)
+    y_k = qlora_matmul(x, wq, am2, a, b, 2.0, qblock=qb, bm=64,
+                       bn=128, bk=128, interpret=True)
+    y_r = ref.qlora_matmul_ref(x, wq, am2, a, b, 2.0)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,H,S,D", [(1, 2, 128, 64), (2, 3, 256, 64),
+                                     (1, 1, 256, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, H, S, D, causal):
+    ks = jax.random.split(jax.random.PRNGKey(B * H + S), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D))
+    k = jax.random.normal(ks[1], (B, H, S, D))
+    v = jax.random.normal(ks[2], (B, H, S, D))
+    o_k = flash_attention(q, k, v, causal=causal, bq=128, bk=128,
+                          interpret=True)
+    o_r = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (2, 2, 128, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 2, 128, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 2, 128, 64)).astype(jnp.bfloat16)
+    o_k = flash_attention(q, k, v, interpret=True)
+    o_r = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("shape", [(16, 256), (4, 37, 512), (2, 3, 5, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    d = shape[-1]
+    x = jax.random.normal(jax.random.PRNGKey(1), shape).astype(dtype)
+    s = jax.random.normal(jax.random.PRNGKey(2), (d,))
+    y_k = rmsnorm(x, s, interpret=True)
+    y_r = ref.rmsnorm_ref(x, s)
+    tol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_qlora_matmul_matches_dense_layer():
+    """Kernel result == the model's dense() dispatch on a quantized+LoRA
+    site (same math end-to-end)."""
+    from repro.models.layers.linear import dense
+    K, N, r, qb = 256, 256, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    w = jax.random.normal(ks[0], (K, N)) * 0.05
+    wq, am = nf4_quantize(w, qb)
+    p = {"w_nf4": wq, "absmax": am,
+         "lora_a": jax.random.normal(ks[1], (K, r)) * 0.1,
+         "lora_b": jax.random.normal(ks[2], (r, N)) * 0.1,
+         "lora_scale": jnp.asarray(2.0)}
+    x = jax.random.normal(ks[3], (32, K))
+    y_model = dense(p, x)
+    y_kernel = qlora_matmul(x, wq, am.reshape(K, N // qb), p["lora_a"],
+                            p["lora_b"], 2.0, qblock=qb, bm=32, bn=128,
+                            bk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_kernel),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,72 @@
+"""int8 KV-cache quantization (§Perf iteration 11): decode parity within
+quantization tolerance, cache actually stored in int8."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.layers.attention import (_dequant_kv, _quant_kv,
+                                           attn_decode, attention,
+                                           init_attention, init_attn_cache)
+
+
+def test_quant_dequant_roundtrip_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32))
+    q, s = _quant_kv(x)
+    assert q.dtype == jnp.int8
+    xd = _dequant_kv(q, s, jnp.float32)
+    rel = float(jnp.abs(xd - x).max() / jnp.abs(x).max())
+    assert rel < 0.02, rel              # 7-bit mantissa per head-slot
+
+
+def test_int8_decode_matches_full_precision(monkeypatch):
+    cfg = get_smoke_config("qwen3-0.6b")
+    params = init_attention(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    pos = jnp.arange(S, dtype=jnp.int32)
+    full = attention(params, cfg, x, positions=pos, kind="causal")
+
+    monkeypatch.setenv("REPRO_KV_INT8", "1")
+    cache = init_attn_cache(B, S, cfg.num_kv_heads, cfg.resolved_head_dim(),
+                            dtype=jnp.float32)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    for t in range(S):
+        y_t, cache = attn_decode(params, cfg, x[:, t:t + 1], cache,
+                                 jnp.asarray(t, jnp.int32))
+        np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=0.05, atol=0.05, err_msg=f"t={t}")
+
+
+def test_int8_prefill_then_decode(monkeypatch):
+    monkeypatch.setenv("REPRO_KV_INT8", "1")
+    from repro.models.registry import get_model
+    cfg = get_smoke_config("smollm-360m")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    B, P = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                cfg.vocab_size)
+    cache, logits = api.prefill(params, cfg, {"tokens": tokens},
+                                cache_len=P + 4)
+    assert cache["k"].dtype == jnp.int8
+    lg, cache = api.decode_step(
+        params, cfg, cache,
+        {"token": jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32),
+         "pos": jnp.asarray(P, jnp.int32)})
+    assert np.all(np.isfinite(np.asarray(lg, np.float32)))
+
+
+def test_int8_cache_is_half_size(monkeypatch):
+    monkeypatch.setenv("REPRO_KV_INT8", "0")
+    c_full = init_attn_cache(2, 128, 4, 64, dtype=jnp.bfloat16)
+    monkeypatch.setenv("REPRO_KV_INT8", "1")
+    c_int8 = init_attn_cache(2, 128, 4, 64, dtype=jnp.bfloat16)
+    size = lambda c: sum(x.size * x.dtype.itemsize  # noqa: E731
+                         for x in jax.tree.leaves(c))
+    assert size(c_int8) < 0.6 * size(c_full)

@@ -1,0 +1,123 @@
+"""Chunked-parallel vs step-by-step recurrence parity.
+
+The strongest correctness check for the SSM/xLSTM math: the chunkwise
+(training) formulations must reproduce the single-step (decode) recurrences
+exactly, position by position — any error in the decay algebra, the
+stabilization, or the chunk-boundary state hand-off shows up here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.layers.mamba2 import (init_mamba2, init_mamba2_cache,
+                                        mamba2_decode, mamba2_forward)
+from repro.models.layers.xlstm import (init_mlstm_block, init_mlstm_cache,
+                                       init_slstm_cache, mlstm_block_decode,
+                                       mlstm_block_forward, slstm_block_decode,
+                                       slstm_block_forward, init_slstm_block)
+
+
+def test_mamba2_chunked_equals_stepwise():
+    cfg = get_smoke_config("zamba2-2.7b")       # chunk_size=32
+    params = init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 96                                # 3 chunks
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+
+    y_chunked, _ = mamba2_forward(params, cfg, x)
+
+    cache = init_mamba2_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, cache = mamba2_decode(params, cfg, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_step),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mamba2_state_threading_across_calls():
+    """forward(x) == forward(x[:half]) -> state -> forward(x[half:], state)."""
+    cfg = get_smoke_config("zamba2-2.7b")
+    params = init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 1, 64
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model)) * 0.5
+    y_full, _ = mamba2_forward(params, cfg, x)
+    y1, st = mamba2_forward(params, cfg, x[:, :32])
+    # NOTE: state hand-off is exact only at chunk boundaries AND when the
+    # conv receptive field is re-fed; use decode for the continuation.
+    cache = init_mamba2_cache(cfg, B, jnp.float32)
+    cache["ssm_state"] = st
+    # rebuild conv tail from the chunked forward with return_cache
+    _, full_cache = mamba2_forward(params, cfg, x[:, :32], return_cache=True)
+    ys = []
+    c = full_cache
+    for t in range(32, S):
+        y_t, c = mamba2_decode(params, cfg, x[:, t:t + 1], c)
+        ys.append(y_t)
+    y2 = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full[:, :32]), np.asarray(y1),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(y_full[:, 32:]), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_chunked_equals_stepwise():
+    cfg = get_smoke_config("xlstm-350m")        # chunk_size=32
+    params = init_mlstm_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 96
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+
+    y_chunked, _ = mlstm_block_forward(params, cfg, x)
+
+    cache = init_mlstm_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, cache = mlstm_block_decode(params, cfg, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+
+    np.testing.assert_allclose(np.asarray(y_chunked), np.asarray(y_step),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_slstm_forward_equals_stepwise():
+    cfg = get_smoke_config("xlstm-350m")
+    params = init_slstm_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 48
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    y_fwd, _ = slstm_block_forward(params, cfg, x)
+    cache = init_slstm_cache(cfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y_t, cache = slstm_block_decode(params, cfg, x[:, t:t + 1], cache)
+        ys.append(y_t)
+    y_step = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_fwd), np.asarray(y_step),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_stability_under_extreme_gates():
+    """Max-stabilization must keep outputs finite even with saturated
+    input gates (exp(i_pre) overflows without the m-state)."""
+    cfg = get_smoke_config("xlstm-350m")
+    params = init_mlstm_block(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 1, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 30.0
+    y, st = mlstm_block_forward(params, cfg, x)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.all(np.isfinite(np.asarray(st["C"])))
+
+
+def test_mamba2_decay_bounds():
+    """All SSD decay exponents are <= 0 by construction (DESIGN note):
+    states cannot blow up for any input."""
+    cfg = get_smoke_config("zamba2-2.7b")
+    params = init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model)) * 50.0
+    y, st = mamba2_forward(params, cfg, x)
+    assert np.all(np.isfinite(np.asarray(y)))
+    assert np.all(np.isfinite(np.asarray(st)))

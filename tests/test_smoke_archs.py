@@ -1,0 +1,96 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+assigned family — one forward/train step + one decode step on CPU,
+asserting output shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.models.registry import (decode_batch_shapes, get_model,
+                                   train_batch_shapes)
+from repro.optim.adamw import adamw_init, adamw_update
+
+
+def _make_batch(cfg, batch, seq, key):
+    shapes = train_batch_shapes(cfg, batch, seq)
+    out = {}
+    for k, (shp, dt) in shapes.items():
+        if dt == jnp.int32:
+            out[k] = jax.random.randint(key, shp, 0, cfg.vocab_size)
+        else:
+            out[k] = jax.random.normal(key, shp, jnp.float32).astype(dt)
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_is_published_spec(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    assert cfg.source, f"{arch} must cite its source"
+    # spot-check the assignment table
+    expected = {
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151_936),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151_936),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256_206),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151_936),
+        "gemma2-27b": (46, 4608, 32, 16, 36_864, 256_000),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49_152),
+        "paligemma-3b": (18, 2048, 8, 1, 16_384, 257_216),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50_304),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10_240, 32_000),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14_336, 32_000),
+    }
+    if arch in expected:
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == expected[arch], (arch, got, expected[arch])
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_config_is_reduced(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = get_smoke_config(arch)
+    api = get_model(cfg)
+    params = api.init(cfg, key)
+    B, S = 2, 64
+    batch = _make_batch(cfg, B, S, jax.random.PRNGKey(1))
+
+    loss, grads = jax.value_and_grad(api.loss)(params, cfg, batch)
+    assert np.isfinite(float(loss)), arch
+    # one optimizer step must change params and keep loss finite
+    opt = adamw_init(params)
+    params2, _ = adamw_update(params, grads, opt, 1, lr=1e-3)
+    loss2 = api.loss(params2, cfg, batch)
+    assert np.isfinite(float(loss2)), arch
+    leaves1 = jax.tree.leaves(params)
+    leaves2 = jax.tree.leaves(params2)
+    assert any(not np.allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32))
+               for a, b in zip(leaves1, leaves2))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_step(arch, key):
+    cfg = get_smoke_config(arch)
+    api = get_model(cfg)
+    params = api.init(cfg, key)
+    B = 2
+    cache = api.init_cache(cfg, B, 128, force_window=0, dtype=jnp.float32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    for pos in range(3):
+        logits, cache = api.decode_step(
+            params, cfg, cache,
+            {"token": tok, "pos": jnp.asarray(pos, jnp.int32)})
+        assert logits.shape == (B, 1, cfg.vocab_size), arch
+        assert np.all(np.isfinite(np.asarray(logits, np.float32))), arch
+        tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)

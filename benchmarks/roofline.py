@@ -27,7 +27,8 @@ sys.path.insert(0, "src")
 import jax
 
 from repro.configs import SHAPES_BY_NAME, get_config
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               PRODUCTION_MESH_SHAPES)
 
 
 def count_params(cfg) -> dict:
@@ -71,6 +72,25 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch
 
 
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def fed_expected_collective_bytes(cfg, mesh_name: str) -> int:
+    """Analytic per-device collective bytes for one federated aggregation
+    round, from repro.dist.fed's axis mapping (ring all-reduce of the LoRA
+    payload over the data/pod axes).  The measured HLO collective bytes of
+    a fed_train step should be dominated by (and never smaller than) this
+    term — the Fig. 5 comm metric and the roofline collective term are the
+    same quantity measured two ways."""
+    from repro.dist import fed
+    from repro.launch.specs import param_shapes
+    tree = param_shapes(cfg, fed=True)
+    per_axis = fed.expected_collective_bytes(
+        tree, PRODUCTION_MESH_SHAPES[mesh_name])
+    return sum(per_axis.values())
+
+
 def load_results(directory: str):
     out = []
     for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
@@ -99,10 +119,15 @@ def analyze_one(r: dict) -> dict:
     bound_time = max(terms.values())
     frac_of_roofline = (t_compute / bound_time) if bound_time else 0.0
 
+    fed_coll = 0
+    if r.get("fed", False) and r["mesh"] in PRODUCTION_MESH_SHAPES:
+        fed_coll = fed_expected_collective_bytes(cfg, r["mesh"])
+
     return {
         **{k: r[k] for k in ("arch", "shape", "mesh", "step_kind",
                              "num_devices", "compile_s")},
         "fed": r.get("fed", False),
+        "fed_coll_expected_bytes": fed_coll,
         "t_compute_s": t_compute,
         "t_memory_s": t_memory,
         "t_collective_s": t_coll,
@@ -150,7 +175,9 @@ def main():
                   f"collective_s={r['t_collective_s']:.4e},"
                   f"dominant={r['dominant']},"
                   f"useful_ratio={r['useful_ratio']:.3f},"
-                  f"temp_gib={r['temp_gib']:.2f}")
+                  f"temp_gib={r['temp_gib']:.2f}" +
+                  (f",fed_coll_expected_bytes={r['fed_coll_expected_bytes']}"
+                   if r["fed"] else ""))
 
 
 if __name__ == "__main__":

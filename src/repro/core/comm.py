@@ -79,14 +79,20 @@ def centralized_epoch(num_samples: int, lookback: int, horizon: int,
     return RoundStats(up, 0, msgs, t)
 
 
-def collective_bytes_per_round(params, mesh_shape: dict) -> dict:
+def collective_bytes_per_round(params, mesh_shape) -> dict:
     """Bytes crossing each mesh axis for one aggregation round when the
     federation is mapped onto the dry-run mesh (clients -> data axis,
     sites -> pod axis). An all-reduce of payload P over an n-way axis moves
-    2·P·(n-1)/n per device (ring)."""
+    2·P·(n-1)/n per device (ring).
+
+    ``mesh_shape`` may be a ``jax.sharding.Mesh`` (its ``.shape`` is used)
+    or a plain ``{axis: size}`` dict.  ``repro.dist.fed`` derives the same
+    quantity from its psum axis mapping; ``tests/test_dist_fed_mapping.py``
+    keeps the two in agreement."""
+    shape = dict(getattr(mesh_shape, "shape", mesh_shape))
     payload = tree_nbytes(lora_tree(params))
     out = {}
     for axis in ("data", "pod"):
-        n = mesh_shape.get(axis, 1)
+        n = shape.get(axis, 1)
         out[axis] = 0 if n <= 1 else int(2 * payload * (n - 1) / n)
     return out

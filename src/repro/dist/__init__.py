@@ -1,0 +1,12 @@
+"""Distribution layer: mesh-aware partition rules + federated collectives.
+
+``repro.dist.sharding`` — partition-spec tables for params (Megatron-style
+tensor parallelism over ``model``), optimizer state (ZeRO-1 widening over
+``data``/``pod``), KV/SSM caches (flash-decode seq-sharding or
+head-sharding), and input batches (data parallelism with replication
+fallback).
+
+``repro.dist.fed`` — FedTime's Algorithm 1 aggregation mapped onto mesh
+collectives: cluster aggregation is a psum over ``data``, cross-site
+aggregation crosses ``pod``.
+"""

@@ -1,0 +1,112 @@
+"""FedTime's federation mapped onto mesh collectives (Algorithm 1, DESIGN.md §3).
+
+Cluster aggregation (Algorithm 1, lines 12-14) is a weighted psum of the
+LoRA adapter deltas over the ``data`` axis: each data-slice of the mesh
+plays one cluster member, training on its own shard of the batch.  The
+cross-site aggregation of the paper's two-site (Caltech/JPL) ACN setting
+crosses the ``pod`` axis.  Because ``repro.dist.sharding`` pins the
+adapters to replication, the payload each round is exactly the LoRA tree —
+FedTime's communication profile (paper Fig. 5): base weights receive no
+grads and no traffic.
+
+``expected_collective_bytes`` recomputes the per-device ring all-reduce
+bytes implied by this axis mapping.  ``repro.core.comm
+.collective_bytes_per_round`` measures the same quantity from the comm-
+accounting side; ``tests/test_dist_fed_mapping.py`` keeps the two in
+agreement so the §Roofline collective term and the paper's Fig. 5 comm
+metric remain one number measured two ways.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.lora import lora_tree, tree_nbytes
+from repro.dist.sharding import _mesh_shape
+
+# Who carries what: every slice along ``data`` is one cluster member; the
+# ``pod`` axis separates sites.
+CLUSTER_AXIS = "data"
+CROSS_SITE_AXIS = "pod"
+
+
+def aggregation_axes(mesh) -> tuple:
+    """Mesh axes the federated psum reduces over, innermost first."""
+    shape = _mesh_shape(mesh)
+    return tuple(ax for ax in (CLUSTER_AXIS, CROSS_SITE_AXIS)
+                 if shape.get(ax, 1) > 1)
+
+
+def ring_allreduce_bytes(payload_bytes: int, n: int) -> int:
+    """Per-device bytes moved by an ``n``-way ring all-reduce of a payload:
+    2·P·(n-1)/n (reduce-scatter + all-gather phases)."""
+    return 0 if n <= 1 else int(2 * payload_bytes * (n - 1) / n)
+
+
+def adapter_payload_bytes(params) -> int:
+    """Bytes of the federated payload — the LoRA tree only."""
+    return tree_nbytes(lora_tree(params))
+
+
+def expected_collective_bytes(params, mesh) -> dict:
+    """Per-axis ring all-reduce bytes for one aggregation round under this
+    module's axis mapping.  Must agree with
+    ``repro.core.comm.collective_bytes_per_round``."""
+    shape = _mesh_shape(mesh)
+    payload = adapter_payload_bytes(params)
+    return {ax: ring_allreduce_bytes(payload, shape.get(ax, 1))
+            for ax in (CLUSTER_AXIS, CROSS_SITE_AXIS)}
+
+
+def fed_psum(tree, mesh):
+    """All-reduce a pytree over the federation axes.  Call from inside a
+    ``shard_map``/``pmap`` body where the axis names are bound; outside a
+    collective context this is an error by construction."""
+    axes = aggregation_axes(mesh)
+    if not axes:
+        return tree
+    return jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
+
+
+def aggregate_adapters(member_adapters, weights, mesh=None):
+    """Algorithm 1, lines 12-14: weighted aggregation of member adapter
+    trees, Σ_k w_k · Δ_k with Σ w_k = 1 (w_k = n_k / n cluster sizes).
+
+    Every leaf of ``member_adapters`` carries a leading member dim of size
+    ``len(weights)``.  Without a real multi-axis mesh this reduces locally;
+    on a mesh whose federation axes are live, the member dim is sharded
+    over them and the reduction lowers to an explicit ring all-reduce —
+    the mesh-collective form of the paper's cluster aggregation."""
+    weights = jnp.asarray(weights, jnp.float32)
+    n = weights.shape[0]
+
+    def wsum(w, a):
+        return (w.reshape((w.shape[0],) + (1,) * (a.ndim - 1)).astype(a.dtype)
+                * a).sum(axis=0)
+
+    axes = aggregation_axes(mesh) if mesh is not None else ()
+    if not axes or not isinstance(mesh, Mesh):
+        return jax.tree.map(lambda a: wsum(weights, a), member_adapters)
+
+    prod = 1
+    for ax in axes:
+        prod *= _mesh_shape(mesh)[ax]
+    if n % prod:
+        raise ValueError(
+            f"member dim {n} must divide the federation axes {axes} ({prod})")
+
+    from jax.experimental.shard_map import shard_map
+    member_spec = P(axes if len(axes) > 1 else axes[0])
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(member_spec, member_spec),
+                       out_specs=P(), check_rep=False)
+    def agg(ad, w):
+        local = jax.tree.map(lambda a: wsum(w, a), ad)
+        return jax.tree.map(lambda x: jax.lax.psum(x, axes), local)
+
+    return agg(member_adapters, weights)

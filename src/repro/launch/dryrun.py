@@ -67,6 +67,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # jax < 0.5 returns a one-element list of dicts
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         # scan-aware accounting (XLA cost_analysis counts while bodies once)
         parsed = hlo_analyze(hlo)

@@ -13,22 +13,35 @@ from __future__ import annotations
 
 import jax
 
+# Canonical production mesh shapes, keyed by the dry-run's mesh name.
+# Single source of truth for mesh construction AND the analytic comm
+# cross-checks (benchmarks/roofline.py, repro.dist.fed).
+PRODUCTION_MESH_SHAPES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis types where the installed jax supports
+    them (>= 0.5); on older jax Auto is the only behavior anyway."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    spec = PRODUCTION_MESH_SHAPES["multi" if multi_pod else "single"]
+    return _make_mesh(tuple(spec.values()), tuple(spec))
 
 
 def make_host_mesh(*, model: int = 1):
     """Whatever this host actually has (CPU smoke / examples)."""
     n = len(jax.devices())
     model = min(model, n)
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n // model, model), ("data", "model"))
 
 
 # v5e hardware constants for the roofline (EXPERIMENTS.md §Roofline)

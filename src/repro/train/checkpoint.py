@@ -14,7 +14,15 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                     # optional: fall back to uncompressed
+    import zstandard
+except ImportError:                      # pragma: no cover - env dependent
+    zstandard = None
+
+# 4-byte magic distinguishing compressed from raw checkpoints, so files stay
+# readable across environments with/without zstandard installed
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _flatten_with_paths(tree, prefix=""):
@@ -39,7 +47,8 @@ def save(path: str, tree: Any) -> int:
         payload[p] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
                       "data": arr.tobytes()}
     raw = msgpack.packb(payload, use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(raw)
+    comp = (zstandard.ZstdCompressor(level=3).compress(raw)
+            if zstandard is not None else raw)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "wb") as f:
         f.write(comp)
@@ -48,7 +57,12 @@ def save(path: str, tree: Any) -> int:
 
 def load(path: str, like: Any = None) -> Any:
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = f.read()
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError(
+                f"{path} is zstd-compressed but zstandard is not installed")
+        raw = zstandard.ZstdDecompressor().decompress(raw)
     payload = msgpack.unpackb(raw, raw=False)
     arrays = {p: jnp.asarray(np.frombuffer(v["data"],
                                            dtype=np.dtype(v["dtype"]))

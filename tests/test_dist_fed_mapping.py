@@ -1,0 +1,120 @@
+"""dist/fed.py <-> core/comm.py agreement: the roofline collective term and
+the paper's Fig. 5 comm metric must be the same quantity measured two ways
+(DESIGN.md §3 — federation mapped onto mesh collectives)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.core import comm
+from repro.core.lora import attach_lora, lora_tree, tree_nbytes
+from repro.dist import fed
+from repro.dist.sharding import param_specs
+from repro.launch.mesh import PRODUCTION_MESH_SHAPES
+
+SINGLE = PRODUCTION_MESH_SHAPES["single"]
+MULTI = PRODUCTION_MESH_SHAPES["multi"]
+
+
+@pytest.fixture(scope="module")
+def fed_params():
+    """Abstract LoRA-attached param tree (no allocation)."""
+    cfg = get_smoke_config("qwen3-0.6b")
+    ft = cfg.fedtime
+
+    def build(key):
+        from repro.models.registry import get_model
+        p = get_model(cfg).init(cfg, key)
+        return attach_lora(p, key, rank=ft.lora_rank, alpha=ft.lora_alpha)
+
+    return jax.eval_shape(build, jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def test_ring_allreduce_formula():
+    assert fed.ring_allreduce_bytes(1000, 1) == 0
+    assert fed.ring_allreduce_bytes(1000, 2) == 1000          # 2*P*(1/2)
+    assert fed.ring_allreduce_bytes(1600, 16) == 3000         # 2*P*(15/16)
+
+
+def test_aggregation_axes():
+    assert fed.aggregation_axes(SINGLE) == ("data",)
+    assert fed.aggregation_axes(MULTI) == ("data", "pod")
+    assert fed.aggregation_axes({"model": 16}) == ()
+
+
+@pytest.mark.parametrize("mesh_shape", [SINGLE, MULTI],
+                         ids=["single_pod", "multi_pod"])
+def test_fed_mapping_matches_comm_accounting(fed_params, mesh_shape):
+    """The ring all-reduce bytes implied by fed.py's psum axis mapping must
+    equal core/comm's per-axis accounting, axis by axis."""
+    expected = fed.expected_collective_bytes(fed_params, mesh_shape)
+    accounted = comm.collective_bytes_per_round(fed_params, mesh_shape)
+    assert expected == accounted
+    # sanity: the single-pod round moves 2*P*(15/16) per device over data
+    payload = tree_nbytes(lora_tree(fed_params))
+    assert expected["data"] == int(2 * payload * 15 / 16)
+
+
+def test_comm_accounting_accepts_mesh_object(fed_params):
+    class FakeMesh:
+        shape = dict(MULTI)
+
+    assert comm.collective_bytes_per_round(fed_params, FakeMesh()) == \
+        comm.collective_bytes_per_round(fed_params, MULTI)
+
+
+def test_lora_payload_is_replicated(fed_params):
+    """Precondition for the pure-psum aggregation: every adapter leaf must
+    be replicated by the sharding rules on the production mesh."""
+    specs = param_specs(fed_params, SINGLE)
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, path + (k,))
+        elif path[-1] in ("lora_a", "lora_b", "lora_scale"):
+            assert tree == P(), path
+
+    walk(specs)
+    # the tree is non-trivial: at least one adapter pair exists
+    assert len(jax.tree.leaves(lora_tree(fed_params))) > 0
+
+
+def test_aggregate_adapters_weighted_mean():
+    """Algorithm 1 line 12: aggregation is the cluster-size-weighted mean."""
+    rng = np.random.default_rng(0)
+    n = 4
+    members = {"wq": {"lora_a": rng.normal(size=(n, 3, 8, 2)),
+                      "lora_b": rng.normal(size=(n, 3, 2, 8))}}
+    members = jax.tree.map(jnp.asarray, members)
+    weights = np.array([0.4, 0.3, 0.2, 0.1])
+
+    out = fed.aggregate_adapters(members, weights)
+    ref = jax.tree.map(
+        lambda a: np.tensordot(weights, np.asarray(a), axes=1), members)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6),
+        out, ref)
+
+    # aggregating identical members with normalized weights is the identity
+    same = jax.tree.map(lambda a: jnp.broadcast_to(a[:1], a.shape), members)
+    out = fed.aggregate_adapters(same, np.full((n,), 1.0 / n))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b[0], rtol=1e-6),
+                 out, same)
+
+
+def test_aggregate_adapters_on_mesh():
+    """The shard_map/psum path, on whatever devices this host has (the
+    federation axis collapses to size 1 on a single-device CPU, making the
+    psum trivial but still exercising the collective lowering)."""
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    n = 4 * n_dev
+    a = jnp.arange(n * 6, dtype=jnp.float32).reshape(n, 2, 3)
+    w = jnp.full((n,), 1.0 / n)
+    out = fed.aggregate_adapters({"lora_a": a}, w, mesh)
+    np.testing.assert_allclose(np.asarray(out["lora_a"]),
+                               np.asarray(a).mean(axis=0), rtol=1e-6)

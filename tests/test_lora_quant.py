@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.configs import get_smoke_config
 from repro.core.lora import (attach_lora, lora_mask, lora_tree,
@@ -124,7 +124,7 @@ def test_lora_mask_marks_only_adapters():
     params = attach_lora(api.init(cfg, jax.random.PRNGKey(0)),
                          jax.random.PRNGKey(1), rank=4, alpha=8.0)
     mask = lora_mask(params)
-    flat_p = jax.tree.leaves_with_path(params)
+    flat_p = jax.tree_util.tree_leaves_with_path(params)
     flat_m = jax.tree.leaves(mask)
     for (path, _), m in zip(flat_p, flat_m):
         is_adapter = any(getattr(k, "key", None) in ("lora_a", "lora_b")

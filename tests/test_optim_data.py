@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.data.timeseries import (DATASETS, generate, make_windows,
                                    train_test_split)
@@ -145,8 +145,6 @@ def test_hlo_cost_counts_scan_trip_counts():
 
 def test_hlo_cost_counts_collectives_inside_loops():
     from repro.launch.hlo_cost import analyze
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
     # single-device: no collectives expected; just exercise the parser
     def f(x):
         def body(c, _):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.patching import (channel_merge, channel_split, make_patches,
                                  num_patches, patch_embed, init_patch_embed)

@@ -18,6 +18,7 @@ import numpy as np
 def emit(row_name: str, **fields):
     kv = ",".join(f"{k}={v}" for k, v in fields.items())
     print(f"{row_name},{kv}", flush=True)
+    return {"row": row_name, **fields}
 
 
 class Timer:

@@ -27,10 +27,58 @@ def _time(fn, *args, iters=5):
     return (time.time() - t0) / iters * 1e6
 
 
+def _flash_decode_case(rows, cache_len: int, full: bool):
+    """One decode token vs an int8 ring cache: naive full-dequant sdpa
+    (the pre-kernel path) vs the streamed blockwise flash-decode pass.
+    CPU wall-clock times the XLA forms of both; the Pallas kernel itself is
+    a dry-run artifact, so its projected HBM traffic is the 'derived'
+    column (int8 cache read once vs dequant-to-f32 materialization)."""
+    from repro.kernels import ref
+    from repro.kernels.flash_decode import flash_decode_xla
+    from repro.models.layers.attention import _quant_kv
+
+    B, Hk, G, D = (4, 8, 4, 128) if full else (2, 4, 4, 64)
+    S = cache_len
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hk * G, D), jnp.float32)
+    kf = jax.random.normal(ks[1], (B, S, Hk, D), jnp.float32)
+    vf = jax.random.normal(ks[2], (B, S, Hk, D), jnp.float32)
+    kq, ksc = _quant_kv(kf)                    # the serving cache quantizer
+    vq, vsc = _quant_kv(vf)
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    pos = jnp.asarray(S - 1, jnp.int32)
+
+    naive = jax.jit(lambda *a: ref.flash_decode_ref(
+        a[0], a[1], a[2], a[5], pos, k_scale=a[3], v_scale=a[4]))
+    fused = jax.jit(lambda *a: flash_decode_xla(
+        a[0], a[1], a[2], a[5], pos, k_scale=a[3], v_scale=a[4],
+        block_kv=1024))
+    args = (q, kq, vq, ksc, vsc, kv_pos)
+    us_naive = _time(naive, *args)
+    us_fused = _time(fused, *args)
+
+    cache_int8 = 2 * B * S * Hk * D            # k+v codes, 1 B each
+    scales = 2 * B * S * Hk * 2                # bf16 absmax
+    # naive: read codes+scales, write + re-read the f32 dequant copy
+    hbm_naive = cache_int8 + scales + cache_int8 * 4 * 2
+    hbm_fused = cache_int8 + scales            # single streamed pass
+    flops = 4 * B * Hk * G * S * D
+    rows.append(emit(
+        "kernel", name=f"flash_decode_{S // 1024}k",
+        us_per_call=round(us_fused, 1), us_naive_sdpa=round(us_naive, 1),
+        speedup=round(us_naive / max(us_fused, 1e-9), 2),
+        derived_flops=flops,
+        derived_arith_intensity=round(flops / hbm_fused, 1),
+        derived_hbm_bytes_naive=hbm_naive, derived_hbm_bytes=hbm_fused,
+        vmem_tile_kib=round((1024 * D * 2 + 1024 * 2 + 8 * D * 4) / 1024,
+                            1)))
+
+
 def run(full: bool = False):
     from repro.core.quant import nf4_quantize
     from repro.kernels import ref
 
+    rows = []
     M, K, N, r, qb = (512, 1024, 1024, 8, 64) if full else (128, 256, 256, 8, 64)
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     w = jax.random.normal(ks[0], (K, N)) * 0.02
@@ -44,11 +92,12 @@ def run(full: bool = False):
     us = _time(f, x, wq, am2, a, b)
     flops = 2 * M * K * N + 2 * M * K * r + 2 * M * r * N
     hbm_bytes = M * K * 2 + K * N // 2 + (K * N // qb) * 4 + M * N * 2
-    emit("kernel", name="qlora_matmul", us_per_call=round(us, 1),
-         derived_flops=flops,
-         derived_arith_intensity=round(flops / hbm_bytes, 1),
-         vmem_tile_kib=round((128 * 128 + 128 * 256 // 2 + 128 * 256 * 4
-                              + 128 * 256 * 4) / 1024, 1))
+    rows.append(emit(
+        "kernel", name="qlora_matmul", us_per_call=round(us, 1),
+        derived_flops=flops,
+        derived_arith_intensity=round(flops / hbm_bytes, 1),
+        vmem_tile_kib=round((128 * 128 + 128 * 256 // 2 + 128 * 256 * 4
+                             + 128 * 256 * 4) / 1024, 1)))
 
     B, H, S, D = (4, 8, 1024, 128) if full else (2, 4, 256, 64)
     q = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D))
@@ -58,9 +107,10 @@ def run(full: bool = False):
     us = _time(f, q, k2, v)
     flops = 4 * B * H * S * S * D
     hbm = 4 * B * H * S * D * 2
-    emit("kernel", name="flash_attention", us_per_call=round(us, 1),
-         derived_flops=flops, derived_arith_intensity=round(flops / hbm, 1),
-         vmem_tile_kib=round((128 * D * 3 + 128 * 128) * 4 / 1024, 1))
+    rows.append(emit(
+        "kernel", name="flash_attention", us_per_call=round(us, 1),
+        derived_flops=flops, derived_arith_intensity=round(flops / hbm, 1),
+        vmem_tile_kib=round((128 * D * 3 + 128 * 128) * 4 / 1024, 1)))
 
     shape = (64, 4096) if full else (32, 512)
     x = jax.random.normal(jax.random.PRNGKey(4), shape)
@@ -68,9 +118,14 @@ def run(full: bool = False):
     f = jax.jit(lambda *args: ref.rmsnorm_ref(*args))
     us = _time(f, x, s)
     n = shape[0] * shape[1]
-    emit("kernel", name="rmsnorm", us_per_call=round(us, 1),
-         derived_flops=3 * n, derived_arith_intensity=0.75,
-         vmem_tile_kib=round(256 * shape[-1] * 4 / 1024, 1))
+    rows.append(emit(
+        "kernel", name="rmsnorm", us_per_call=round(us, 1),
+        derived_flops=3 * n, derived_arith_intensity=0.75,
+        vmem_tile_kib=round(256 * shape[-1] * 4 / 1024, 1)))
+
+    for cache_len in (4096, 32768):
+        _flash_decode_case(rows, cache_len, full)
+    return rows
 
 
 def main():

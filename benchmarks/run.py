@@ -9,6 +9,7 @@ roofline).  Prints ``name,key=value,...`` CSV rows.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -46,7 +47,12 @@ def main() -> None:
         print(f"# === {name} ===", flush=True)
         t0 = time.time()
         try:
-            fn(full=args.full)
+            rows = fn(full=args.full)
+            if name == "kernels" and rows:
+                # the perf trajectory artifact: kernel timings per PR
+                with open("BENCH_kernels.json", "w") as f:
+                    json.dump({"full": args.full, "rows": rows}, f, indent=2)
+                print("# wrote BENCH_kernels.json", flush=True)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1

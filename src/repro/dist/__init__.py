@@ -9,4 +9,7 @@ fallback).
 ``repro.dist.fed`` — FedTime's Algorithm 1 aggregation mapped onto mesh
 collectives: cluster aggregation is a psum over ``data``, cross-site
 aggregation crosses ``pod``.
+
+``repro.dist.decode`` — the decode step for seq-sharded caches: per-shard
+flash-decode (m, l, acc) partials combined with a pmax/psum over ``model``.
 """

@@ -1,0 +1,94 @@
+"""Sequence-sharded flash-decode (DESIGN.md §5 cache layouts).
+
+``REPRO_CACHE_SHARD=seq`` — the default flash-decode layout — puts the ring
+cache's slot axis on the ``model`` mesh axis, so no device ever holds the
+whole cache.  A decode step then needs a cross-shard softmax: each model
+shard runs the flash-decode kernel over its local slots with
+``return_partials=True`` (unnormalized online-softmax state), and the
+combine
+
+    m* = pmax(m, model)
+    out = psum(exp(m - m*) * acc, model) / psum(exp(m - m*) * l, model)
+
+is exactly the kernel's own cross-split (m, l, acc) merge lifted onto mesh
+collectives.  Masking needs no adjustment: slots carry absolute positions in
+``kv_pos``, which shard with the cache, so ring-validity / causal / window /
+prefix masks are position-local facts.
+
+``seq_shard_mesh`` gates the path: it returns the ambient mesh only when a
+mesh is active, the ``model`` axis is real, the layout is ``seq``, and the
+cache length divides — otherwise ``attn_decode`` stays on the single-shard
+kernel and XLA handles whatever layout the arrays actually have.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import _batch_axes, _mesh_shape, current_mesh
+
+
+def seq_shard_mesh(cache_len: int):
+    """The ambient mesh when the seq-sharded decode path applies, else
+    None."""
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    shape = _mesh_shape(mesh)
+    if shape.get("model", 1) <= 1:
+        return None
+    if os.environ.get("REPRO_CACHE_SHARD", "seq") != "seq":
+        return None
+    if cache_len % shape["model"]:
+        return None
+    return mesh
+
+
+def sharded_flash_decode(q, k, v, kv_pos, q_pos, mesh, *, k_scale=None,
+                         v_scale=None, kind: str = "causal", window: int = 0,
+                         prefix_len=None, softcap: float = 0.0,
+                         block_kv: int = 512):
+    """One decode step against a cache whose slot axis is sharded over
+    ``model``: per-shard kernel partials + psum-style combine.  Same
+    signature/result as ``repro.kernels.ops.flash_decode``."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.kernels import ops
+
+    B = k.shape[0]
+    shape = _mesh_shape(mesh)
+    bax = _batch_axes(B, shape)
+    q_spec = P(bax, None, None, None)
+    kv_spec = P(bax, "model", None, None)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1), (B,))
+    plen = jnp.broadcast_to(
+        jnp.asarray(0 if prefix_len is None else prefix_len,
+                    jnp.int32).reshape(-1), (B,))
+    args = [q, k, v, kv_pos, qp, plen]
+    specs = [q_spec, kv_spec, kv_spec, P(bax, "model"), P(bax), P(bax)]
+    if k_scale is not None:
+        args += [k_scale, v_scale]
+        specs += [kv_spec, kv_spec]
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=tuple(specs),
+                       out_specs=q_spec, check_rep=False)
+    def body(q, k, v, kv_pos, qp, plen, *scales):
+        ks, vs = scales if scales else (None, None)
+        m, l, acc = ops.flash_decode(
+            q, k, v, kv_pos, qp, k_scale=ks, v_scale=vs, kind=kind,
+            window=window, prefix_len=plen, softcap=softcap,
+            block_kv=block_kv, return_partials=True)
+        m_g = jax.lax.pmax(m, "model")
+        w = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * w, "model")
+        acc_g = jax.lax.psum(acc * w, "model")
+        out = acc_g / jnp.maximum(l_g, 1e-30)        # (B_loc, Hk, G, D)
+        return out.reshape(out.shape[0], 1, -1,
+                           out.shape[-1]).astype(q.dtype)
+
+    return body(*args)

@@ -1,0 +1,323 @@
+"""Fused flash-decode Pallas TPU kernel over the ring KV cache.
+
+One decode step: G grouped queries per KV head attend to every valid slot of
+the ring buffer.  Grid is (batch, kv_head, KV blocks); the KV axis is
+innermost, so each program streams one ``block_kv`` cache tile through VMEM
+while a running (m, l, acc) online-softmax state persists in scratch.  The
+KV axis is further carved into ``n_splits`` independent splits: each split
+flushes its own partial (m, l, acc) and a final cross-split combine (plain
+jnp — the payload is n_splits x G x D per head) produces the output.  This
+split-KV shape is what makes single-token decode fill the chip: without it,
+one (batch, head) pair maps to one core-sequential stream.
+
+Fused into the streamed pass:
+  - int8 -> f32 dequantization from the per-slot absmax scales
+    (``REPRO_KV_INT8`` caches), so the quantized cache is never materialized
+    in HBM at full precision;
+  - ring-buffer validity / causal / prefix / sliding-window masking from the
+    absolute slot positions ``kv_pos`` (slot position -1 == empty);
+  - GQA query-group packing: the G queries of one KV head are one
+    (G, block_kv) MXU matmul instead of G vector products.
+
+Cache layout note: the ring cache lives as (B, S, Hk, dh).  The kernel views
+k/v as (B, S, Hk*dh) — a free row-major reshape — so each BlockSpec block is
+a well-tiled (block_kv, dh) slab; no transpose of the cache is ever made.
+
+``flash_decode_xla`` is the same algorithm as a ``jax.lax.scan`` over KV
+blocks (the non-TPU fallback: fused blockwise dequant, no full-cache
+materialization).  Both support ``return_partials`` for the sequence-sharded
+path (``repro.dist.decode``): a shard computes local (m, l, acc) over its
+slots and the cross-shard combine is a pmax/psum over the ``model`` axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Finite mask fill: -inf poisons the online-softmax recurrences (exp(-inf -
+# -inf) = nan) on fully-masked blocks; with a finite floor the masked
+# probabilities are zeroed explicitly and every carry stays finite.
+_NEG = -1e30
+
+
+def _slot_mask(kp, qp, plen, *, kind: str, window: int):
+    """Boolean keep-mask over KV slots from absolute positions.
+
+    kp: (..., block) int32 slot positions (-1 == empty ring slot);
+    qp / plen: scalars (or broadcastable) — the query position and prefix
+    length.  Mirrors repro.models.layers.attention._mask for Sq == 1.
+    """
+    valid = kp >= 0
+    if kind == "causal":
+        m = kp <= qp
+    elif kind == "prefix":
+        m = (kp <= qp) | (kp < plen)
+    elif kind == "full":
+        m = jnp.ones_like(valid)
+    else:
+        raise ValueError(kind)
+    if window > 0 and kind != "full":
+        m = m & (qp - kp < window)
+    return m & valid
+
+
+def _pick_splits(n_blocks: int, requested: int) -> int:
+    """Largest split count <= requested that divides the block count."""
+    n = requested or (8 if n_blocks >= 32 else 4 if n_blocks >= 8 else 1)
+    n = max(1, min(n, n_blocks))
+    while n_blocks % n:
+        n -= 1
+    return n
+
+
+def _combine(m, l, acc, axis: int):
+    """Merge independent online-softmax partials along ``axis``:
+    out = sum_i exp(m_i - m*) acc_i / sum_i exp(m_i - m*) l_i."""
+    m_g = m.max(axis=axis, keepdims=True)
+    w = jnp.exp(m - m_g)
+    l_tot = (l * w).sum(axis=axis)
+    acc_tot = (acc * w).sum(axis=axis)
+    return acc_tot / jnp.maximum(l_tot, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(qpos_ref, plen_ref, q_ref, k_ref, v_ref, kpos_ref, *rest,
+            bps: int, kind: str, window: int, softcap: float, scale: float,
+            quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_m, o_l, o_acc, m_s, l_s, acc_s = rest
+    else:
+        o_m, o_l, o_acc, m_s, l_s, acc_s = rest
+    j = pl.program_id(2)
+    local = jax.lax.rem(j, bps)
+
+    @pl.when(local == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, _NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (G, D)
+    k = k_ref[0].astype(jnp.float32)                 # (block_kv, D)
+    v = v_ref[0].astype(jnp.float32)
+    if quantized:                                    # fused int8 dequant
+        k = k * ks_ref[0].astype(jnp.float32)        # scales (block_kv, 1)
+        v = v * vs_ref[0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kp = kpos_ref[...]                               # (1, block_kv)
+    mask = _slot_mask(kp, qpos_ref[0, 0], plen_ref[0, 0],
+                      kind=kind, window=window)      # (1, block_kv)
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_s[...]                                # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)     # (G, block_kv)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + p.sum(-1, keepdims=True)
+    acc_s[...] = acc_s[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(local == bps - 1)
+    def _flush():
+        o_m[0, 0, 0] = m_s[...]
+        o_l[0, 0, 0] = l_s[...]
+        o_acc[0, 0, 0] = acc_s[...]
+
+
+def _pad_inputs(q, k, v, kv_pos, k_scale, v_scale, block_kv: int):
+    """Pad the KV axis to a block multiple (padded slots get position -1 so
+    the validity mask drops them) and pack queries per KV head, G padded to
+    the f32 sublane count."""
+    B, S, Hk, D = k.shape
+    H = q.shape[2]
+    G = H // Hk
+    g_pad = -G % 8
+    qg = q.reshape(B, Hk, G, D)
+    if g_pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad), (0, 0)))
+    s_pad = -S % block_kv
+    if s_pad:
+        pad4 = ((0, 0), (0, s_pad), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad4), jnp.pad(v, pad4)
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, s_pad)), constant_values=-1)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, pad4)
+            v_scale = jnp.pad(v_scale, pad4)
+    return qg, k, v, kv_pos, k_scale, v_scale, G, G + g_pad
+
+
+def _broadcast_pos(x, batch: int):
+    x = jnp.zeros((), jnp.int32) if x is None else jnp.asarray(x, jnp.int32)
+    return jnp.broadcast_to(x.reshape(-1, 1) if x.ndim else x,
+                            (batch, 1)).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "window", "softcap", "block_kv",
+                              "n_splits", "interpret", "return_partials"))
+def flash_decode(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
+                 kind: str = "causal", window: int = 0, prefix_len=None,
+                 softcap: float = 0.0, block_kv: int = 512, n_splits: int = 0,
+                 interpret: bool = False, return_partials: bool = False):
+    """One fused decode step against the ring cache.
+
+    q: (B, 1, H, D); k, v: (B, S, Hk, D) ring buffers (int8 when
+    ``k_scale``/``v_scale`` — (B, S, Hk, 1) absmax scales — are given);
+    kv_pos: (B, S) absolute slot positions (-1 == empty); q_pos: scalar or
+    (B,) query position.  Returns (B, 1, H, D) in q.dtype, or the raw f32
+    partials (m, l, acc) of shapes (B, Hk, G, 1)/(B, Hk, G, 1)/(B, Hk, G, D)
+    when ``return_partials`` (sequence-sharded combine, repro.dist.decode).
+    """
+    B, S, Hk, D = k.shape
+    kv_pos = jnp.asarray(kv_pos, jnp.int32)
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (B, S))
+    block_kv = min(block_kv, -(-S // 128) * 128)
+    quantized = k_scale is not None
+    qg, k, v, kv_pos, k_scale, v_scale, G, G_pad = _pad_inputs(
+        q, k, v, kv_pos, k_scale, v_scale, block_kv)
+    S_pad = k.shape[1]
+    n_blocks = S_pad // block_kv
+    n_splits = _pick_splits(n_blocks, n_splits)
+    bps = n_blocks // n_splits
+
+    # (B, S, Hk, D) -> (B, S, Hk*D): free reshape that turns each per-head
+    # KV tile into a contiguous, well-tiled (block_kv, D) block.
+    kr = k.reshape(B, S_pad, Hk * D)
+    vr = v.reshape(B, S_pad, Hk * D)
+    qp = _broadcast_pos(q_pos, B)
+    plen = _broadcast_pos(prefix_len, B)
+
+    smem = lambda: pl.BlockSpec((1, 1), lambda b, h, j: (b, 0),  # noqa: E731
+                                memory_space=pltpu.SMEM)
+    in_specs = [
+        smem(), smem(),
+        pl.BlockSpec((1, 1, G_pad, D), lambda b, h, j: (b, h, 0, 0)),
+        pl.BlockSpec((1, block_kv, D), lambda b, h, j: (b, j, h)),
+        pl.BlockSpec((1, block_kv, D), lambda b, h, j: (b, j, h)),
+        pl.BlockSpec((1, block_kv), lambda b, h, j: (b, j)),
+    ]
+    args = [qp, plen, qg, kr, vr, kv_pos]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, block_kv, 1), lambda b, h, j: (b, j, h)),
+                     pl.BlockSpec((1, block_kv, 1), lambda b, h, j: (b, j, h))]
+        args += [k_scale.reshape(B, S_pad, Hk),
+                 v_scale.reshape(B, S_pad, Hk)]
+
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, G_pad, 1),
+                     lambda b, h, j, _bps=bps: (b, h, j // _bps, 0, 0)),
+        pl.BlockSpec((1, 1, 1, G_pad, 1),
+                     lambda b, h, j, _bps=bps: (b, h, j // _bps, 0, 0)),
+        pl.BlockSpec((1, 1, 1, G_pad, D),
+                     lambda b, h, j, _bps=bps: (b, h, j // _bps, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, D), jnp.float32),
+    ]
+
+    m, l, acc = pl.pallas_call(
+        functools.partial(_kernel, bps=bps, kind=kind, window=window,
+                          softcap=softcap, scale=D ** -0.5,
+                          quantized=quantized),
+        grid=(B, Hk, n_blocks),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((G_pad, 1), jnp.float32),
+            pltpu.VMEM((G_pad, 1), jnp.float32),
+            pltpu.VMEM((G_pad, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+    m, l, acc = m[:, :, :, :G], l[:, :, :, :G], acc[:, :, :, :G]
+    if return_partials:
+        m_loc = m.max(axis=2)
+        w = jnp.exp(m - m.max(axis=2, keepdims=True))
+        return m_loc, (l * w).sum(axis=2), (acc * w).sum(axis=2)
+    out = _combine(m, l, acc, axis=2)                # (B, Hk, G, D)
+    return out.reshape(B, 1, Hk * G, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# XLA fallback: identical algorithm as a scan over KV blocks (fused
+# blockwise dequant — the quantized cache is never materialized whole)
+# ---------------------------------------------------------------------------
+
+def flash_decode_xla(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
+                     kind: str = "causal", window: int = 0, prefix_len=None,
+                     softcap: float = 0.0, block_kv: int = 512,
+                     return_partials: bool = False, **_unused):
+    """Same signature/semantics as ``flash_decode`` without Pallas: a
+    ``lax.scan`` over block_kv-sized cache tiles with in-block dequant and
+    online softmax — O(block) temporaries instead of O(cache_len)."""
+    B, S, Hk, D = k.shape
+    kv_pos = jnp.asarray(kv_pos, jnp.int32)
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (B, S))
+    block_kv = min(block_kv, S)
+    quantized = k_scale is not None
+    qg, k, v, kv_pos, k_scale, v_scale, G, _ = _pad_inputs(
+        q, k, v, kv_pos, k_scale, v_scale, block_kv)
+    qg = qg[:, :, :G].astype(jnp.float32)            # no sublane padding here
+    S_pad = k.shape[1]
+    nb = S_pad // block_kv
+    scale = D ** -0.5
+    qp = _broadcast_pos(q_pos, B)[:, :, None, None]  # (B, 1, 1, 1)
+    plen = _broadcast_pos(prefix_len, B)[:, :, None, None]
+
+    def to_blocks(x):
+        return x.reshape((B, nb, block_kv) + x.shape[2:]).swapaxes(0, 1)
+
+    blocks = [to_blocks(k), to_blocks(v), to_blocks(kv_pos)]
+    if quantized:
+        blocks += [to_blocks(k_scale), to_blocks(v_scale)]
+
+    def kv_step(carry, blk):
+        m_run, l_run, acc = carry
+        if quantized:
+            kb, vb, kpb, ksb, vsb = blk
+            kb = kb.astype(jnp.float32) * ksb.astype(jnp.float32)
+            vb = vb.astype(jnp.float32) * vsb.astype(jnp.float32)
+        else:
+            kb, vb, kpb = blk
+            kb, vb = kb.astype(jnp.float32), vb.astype(jnp.float32)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = _slot_mask(kpb[:, None, None, :], qp, plen,
+                          kind=kind, window=window)  # (B, 1, 1, block_kv)
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m_run, s.max(-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bhgk,bkhd->bhgd", p, vb, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hk, G, 1), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, 1), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), tuple(blocks))
+    if return_partials:
+        return m, l, acc
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, 1, Hk * G, D).astype(q.dtype)

@@ -3,6 +3,16 @@
 On TPU the kernels run compiled; everywhere else (this CPU container) they
 run in interpret mode or fall back to the jnp oracle.  ``use_kernels()``
 reflects the effective mode so model code can branch once.
+
+Decode path: ``flash_decode`` is the serving hot loop — one token against
+the ring KV cache.  On TPU it is the fused Pallas split-KV kernel
+(int8-aware, GQA-packed, ring/window/prefix masking in-kernel); off-TPU it
+dispatches to ``flash_decode_xla``, the same online-softmax algorithm as a
+``lax.scan`` over cache blocks with fused blockwise dequant — in neither
+mode is the full quantized cache ever dequantized to HBM.  Sequence-sharded
+caches (``REPRO_CACHE_SHARD=seq``) go through ``repro.dist.decode``, which
+calls this entry point with ``return_partials=True`` per shard and combines
+the (m, l, acc) partials with a pmax/psum over the ``model`` axis.
 """
 
 from __future__ import annotations
@@ -14,6 +24,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.flash_decode import flash_decode_xla as _flash_decode_xla
 from repro.kernels.qlora_matmul import qlora_matmul as _qlora
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
@@ -28,6 +40,23 @@ def use_kernels() -> bool:
     return on_tpu() or os.environ.get("REPRO_FORCE_KERNELS") == "1"
 
 
+def flash_decode_enabled() -> bool:
+    """Escape hatch: REPRO_FLASH_DECODE=0 restores the legacy
+    dequantize-then-sdpa decode step (baselines / A-B benchmarks)."""
+    return os.environ.get("REPRO_FLASH_DECODE", "1") != "0"
+
+
+def decode_mode() -> str:
+    """Human-readable decode dispatch (launchers print this)."""
+    if not flash_decode_enabled():
+        return "naive-sdpa (REPRO_FLASH_DECODE=0)"
+    if on_tpu():
+        return "flash_decode (pallas, compiled)"
+    if use_kernels():
+        return "flash_decode (pallas, interpret)"
+    return "flash_decode (xla blockwise fallback)"
+
+
 def qlora_matmul(x, w_nf4, absmax, lora_a, lora_b, lora_scale, **kw):
     if use_kernels():
         return _qlora(x, w_nf4, absmax, lora_a, lora_b, lora_scale,
@@ -39,6 +68,15 @@ def flash_attention(q, k, v, *, causal: bool = True, **kw):
     if use_kernels():
         return _flash(q, k, v, causal=causal, interpret=not on_tpu(), **kw)
     return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def flash_decode(q, k, v, kv_pos, q_pos, **kw):
+    """One decode step over the ring cache; see
+    ``repro.kernels.flash_decode`` for signature and semantics."""
+    if use_kernels():
+        return _flash_decode(q, k, v, kv_pos, q_pos,
+                             interpret=not on_tpu(), **kw)
+    return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-6, **kw):

@@ -36,6 +36,55 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
 
+def flash_decode_ref(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
+                     kind: str = "causal", window: int = 0, prefix_len=None,
+                     softcap: float = 0.0, **_unused):
+    """Naive decode-step oracle: dequantize the whole cache, materialize the
+    full (H, S) score matrix, f32 softmax.  q: (B, 1, H, D); k, v:
+    (B, S, Hk, D) (+ (B, S, Hk, 1) absmax scales for int8 caches); kv_pos:
+    (B, S) absolute slot positions (-1 == empty); q_pos scalar or (B,)."""
+    B, S, Hk, D = k.shape
+    H = q.shape[2]
+    G = H // Hk
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)
+        vf = vf * v_scale.astype(jnp.float32)
+    qg = q[:, 0].reshape(B, Hk, G, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kf,
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    kv_pos = jnp.asarray(kv_pos, jnp.int32)
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None], (B, S))
+    kp = kv_pos[:, None, None, :]
+    qp = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32).reshape(-1),
+                          (B,)).reshape(B, 1, 1, 1)
+    valid = kp >= 0
+    if kind == "causal":
+        m = kp <= qp
+    elif kind == "prefix":
+        pl_ = jnp.broadcast_to(jnp.asarray(prefix_len, jnp.int32).reshape(-1),
+                               (B,)).reshape(B, 1, 1, 1)
+        m = (kp <= qp) | (kp < pl_)
+    elif kind == "full":
+        m = jnp.ones_like(valid)
+    else:
+        raise ValueError(kind)
+    if window > 0 and kind != "full":
+        m = m & (qp - kp < window)
+    m = m & valid
+
+    s = jnp.where(m, s, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(m.any(-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, vf)
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
 def rmsnorm_ref(x, scale, eps: float = 1e-6):
     """x: (..., d)."""
     x32 = x.astype(jnp.float32)

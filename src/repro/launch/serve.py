@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config, get_smoke_config
+from repro.kernels import ops
 from repro.launch.steps import make_serve_step
 from repro.models.registry import get_model, train_batch_shapes
 
@@ -30,6 +31,7 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    print(f"decode path: {ops.decode_mode()}")
     api = get_model(cfg)
     params = api.init(cfg, jax.random.PRNGKey(0))
     B, P = args.batch, args.prompt_len

@@ -5,7 +5,10 @@
                  aggregation over the data (+pod) axes folded into the step
                  (DESIGN.md §3: federation mapped onto mesh collectives)
   prefill_step — full forward building the KV/SSM cache + last logits
-  serve_step   — one-token decode against the cache
+  serve_step   — one-token decode against the cache, through the fused
+                 flash-decode kernel path (repro.kernels.ops.flash_decode;
+                 seq-sharded caches combine per-shard partials over the
+                 ``model`` axis via repro.dist.decode)
 
 All are pure; cfg/api are closed over (static).
 """
@@ -118,6 +121,10 @@ def make_prefill_step(cfg: ModelConfig, *, force_window: int = 0):
 
 
 def make_serve_step(cfg: ModelConfig, *, force_window: int = 0):
+    """One-token decode step.  Attention over the ring cache runs the fused
+    flash-decode path (Pallas on TPU, blockwise XLA elsewhere; int8 caches
+    dequantized tile-by-tile in the streamed pass); REPRO_FLASH_DECODE=0
+    restores the legacy dequantize-then-sdpa step for A/B comparison."""
     api = get_model(cfg)
 
     def serve_step(params, cache, batch):

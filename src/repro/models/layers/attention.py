@@ -11,6 +11,7 @@ prefill, sliding-window decode and prefix-LM uniformly.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -92,12 +93,18 @@ def _scores(q, k, scale: float, softcap: float) -> jnp.ndarray:
 
 def sdpa(q, k, v, *, q_pos, kv_pos, kind: str = "causal", window: int = 0,
          prefix_len=None, softcap: float = 0.0,
-         block_q: int = 0, block_kv: int = 0) -> jnp.ndarray:
+         block_q: int = 0, block_kv: int = 0,
+         k_scale=None, v_scale=None) -> jnp.ndarray:
     """General SDPA.
 
     q: (B, Sq, H, D); k, v: (B, Skv, Hk, D); returns (B, Sq, H, D).
     ``block_q``/``block_kv`` > 0 selects the memory-bounded blockwise path
-    (required for 32k+ sequences; see DESIGN.md §3).
+    (required for 32k+ sequences; see DESIGN.md §3).  Ragged lengths are
+    handled by padding the tail block with invalid (position -1) slots.
+
+    ``k_scale``/``v_scale`` ((B, Skv, Hk, 1) absmax scales) mark k/v as an
+    int8-quantized cache; the blockwise path dequantizes per KV block inside
+    the scan, so the full cache is never materialized at compute precision.
     """
     B, Sq, H, D = q.shape
     Hk = k.shape[2]
@@ -105,9 +112,14 @@ def sdpa(q, k, v, *, q_pos, kv_pos, kind: str = "causal", window: int = 0,
     scale = D ** -0.5
     q_pos = _as_b(q_pos, B)
     kv_pos = _as_b(kv_pos, B)
-    qg = q.reshape(B, Sq, Hk, G, D)
+    quantized = k_scale is not None
 
     if block_kv <= 0 or k.shape[1] <= block_kv:
+        # single logical KV block: dequant here is already blockwise
+        if quantized:
+            k = _dequant_kv(k, k_scale, q.dtype)
+            v = _dequant_kv(v, v_scale, q.dtype)
+        qg = q.reshape(B, Sq, Hk, G, D)
         s = _scores(qg, k, scale, softcap)
         m = _mask(q_pos, kv_pos, kind, window, prefix_len)
         s = jnp.where(m, s, _NEG_INF)
@@ -118,16 +130,33 @@ def sdpa(q, k, v, *, q_pos, kv_pos, kind: str = "causal", window: int = 0,
         return o.reshape(B, Sq, H, D)
 
     # ---- blockwise path: outer map over Q blocks, inner scan over KV ----
+    # ragged tails are padded: KV slots with position -1 (masked invalid),
+    # Q rows with position -1 (fully masked; sliced off the output)
     Skv = k.shape[1]
-    assert Skv % block_kv == 0, (Skv, block_kv)
+    pad_kv = -Skv % block_kv
+    if pad_kv:
+        pad4 = ((0, 0), (0, pad_kv), (0, 0), (0, 0))
+        k, v = jnp.pad(k, pad4), jnp.pad(v, pad4)
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_kv)), constant_values=-1)
+        if quantized:
+            k_scale = jnp.pad(k_scale, pad4)
+            v_scale = jnp.pad(v_scale, pad4)
     if block_q <= 0 or Sq < block_q:
         block_q = Sq
-    assert Sq % block_q == 0, (Sq, block_q)
-    nq, nk = Sq // block_q, Skv // block_kv
+    pad_q = -Sq % block_q
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)), constant_values=-1)
+    Sq_pad, Skv_pad = q.shape[1], k.shape[1]
+    nq, nk = Sq_pad // block_q, Skv_pad // block_kv
+    qg = q.reshape(B, Sq_pad, Hk, G, D)
 
     k_blocks = k.reshape(B, nk, block_kv, Hk, D)
     v_blocks = v.reshape(B, nk, block_kv, Hk, D)
     kp_blocks = kv_pos.reshape(B, nk, block_kv)
+    if quantized:
+        ks_blocks = k_scale.reshape(B, nk, block_kv, Hk, 1)
+        vs_blocks = v_scale.reshape(B, nk, block_kv, Hk, 1)
 
     def one_q_block(args):
         qb, qpb = args                      # (B,block_q,Hk,G,D), (B,block_q)
@@ -135,7 +164,12 @@ def sdpa(q, k, v, *, q_pos, kv_pos, kind: str = "causal", window: int = 0,
         @functools.partial(jax.checkpoint, prevent_cse=False)
         def kv_step(carry, blk):
             m_run, l_run, acc = carry
-            kb, vb, kpb = blk               # (B,block_kv,Hk,D), ..., (B,block_kv)
+            if quantized:                   # fused in-scan dequant
+                kb, vb, kpb, ksb, vsb = blk
+                kb = _dequant_kv(kb, ksb, qb.dtype)
+                vb = _dequant_kv(vb, vsb, qb.dtype)
+            else:
+                kb, vb, kpb = blk           # (B,block_kv,Hk,D), (B,block_kv)
             s = _scores(qb, kb, scale, softcap)           # (B,Hk,G,bq,bk) f32
             msk = _mask(qpb, kpb, kind, window, prefix_len)
             s = jnp.where(msk, s, _NEG_INF)
@@ -150,20 +184,22 @@ def sdpa(q, k, v, *, q_pos, kv_pos, kind: str = "causal", window: int = 0,
         m0 = jnp.full((B, Hk, G, block_q), _NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, Hk, G, block_q), jnp.float32)
         a0 = jnp.zeros((B, Hk, G, block_q, D), jnp.float32)
-        (m_f, l_f, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0),
-            (k_blocks.transpose(1, 0, 2, 3, 4),
-             v_blocks.transpose(1, 0, 2, 3, 4),
-             kp_blocks.transpose(1, 0, 2)))
+        xs = [k_blocks.transpose(1, 0, 2, 3, 4),
+              v_blocks.transpose(1, 0, 2, 3, 4),
+              kp_blocks.transpose(1, 0, 2)]
+        if quantized:
+            xs += [ks_blocks.transpose(1, 0, 2, 3, 4),
+                   vs_blocks.transpose(1, 0, 2, 3, 4)]
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), tuple(xs))
         out = acc / jnp.maximum(l_f, 1e-30)[..., None]
         return out                           # (B,Hk,G,block_q,D)
 
     qg_blocks = qg.reshape(B, nq, block_q, Hk, G, D).transpose(1, 0, 2, 3, 4, 5)
     qp_blocks = q_pos.reshape(B, nq, block_q).transpose(1, 0, 2)
     outs = jax.lax.map(one_q_block, (qg_blocks, qp_blocks))
-    # outs: (nq, B, Hk, G, block_q, D) -> (B, nq·block_q = Sq, Hk, G, D)
-    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hk, G, D)
-    return o.reshape(B, Sq, H, D).astype(q.dtype)
+    # outs: (nq, B, Hk, G, block_q, D) -> (B, nq·block_q, Hk, G, D)
+    o = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq_pad, Hk, G, D)
+    return o.reshape(B, Sq_pad, H, D)[:, :Sq].astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -251,6 +287,13 @@ def _dequant_kv(q, scale, dtype):
             scale.astype(jnp.float32)).astype(dtype)
 
 
+def _decode_block_kv() -> int:
+    """KV block streamed per decode step through the fused path (the Pallas
+    kernel additionally splits blocks across KV splits).  Read per call so
+    REPRO_DECODE_BLOCK_KV behaves like every other REPRO_ flag."""
+    return int(os.environ.get("REPRO_DECODE_BLOCK_KV", "1024"))
+
+
 def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
                 kind: str = "causal", prefix_len=None):
     """One decode step.
@@ -258,6 +301,15 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
     x_t: (B, 1, d_in); ``pos`` scalar int32 (synchronous batch decode);
     cache: ring buffer from ``init_attn_cache`` (cache_len == window for SWA
     layers, == max_seq for global layers).  Returns (y_t, new_cache).
+
+    Attention over the cache goes through the fused flash-decode path
+    (``repro.kernels.ops.flash_decode``): Pallas kernel on TPU /
+    REPRO_FORCE_KERNELS=1, blockwise-scan XLA fallback elsewhere — the int8
+    cache is dequantized tile-by-tile inside the streamed pass, never whole.
+    Under an active mesh with a seq-sharded cache (REPRO_CACHE_SHARD=seq)
+    the step runs per-shard with a psum-style combine over ``model``
+    (``repro.dist.decode``).  REPRO_FLASH_DECODE=0 restores the legacy
+    dequantize-then-sdpa step.
     """
     B = x_t.shape[0]
     cache_len = cache["k"].shape[1]
@@ -282,30 +334,61 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
         new_cache["v"] = upd(cache["v"], vq)
         new_cache["k_scale"] = upd(cache["k_scale"], ks)
         new_cache["v_scale"] = upd(cache["v_scale"], vs)
-        k_full = _dequant_kv(new_cache["k"], new_cache["k_scale"], q.dtype)
-        v_full = _dequant_kv(new_cache["v"], new_cache["v_scale"], q.dtype)
     else:
-        new_cache["k"] = k_full = upd(cache["k"], k_t)
-        new_cache["v"] = v_full = upd(cache["v"], v_t)
+        new_cache["k"] = upd(cache["k"], k_t)
+        new_cache["v"] = upd(cache["v"], v_t)
     pos_new = jax.lax.dynamic_update_slice_in_dim(
         cache["kv_pos"], jnp.full((B, 1), pos, jnp.int32), slot, axis=1)
     new_cache["kv_pos"] = pos_new
-    o = sdpa(q, k_full, v_full,
-             q_pos=jnp.full((B, 1), pos, jnp.int32), kv_pos=pos_new,
-             kind=kind, window=window, prefix_len=prefix_len,
-             softcap=cfg.attn_logit_softcap)
+
+    from repro.kernels import ops
+    if ops.flash_decode_enabled():
+        from repro.dist.decode import seq_shard_mesh, sharded_flash_decode
+        kw = dict(k_scale=new_cache.get("k_scale"),
+                  v_scale=new_cache.get("v_scale"),
+                  kind=kind, window=window, prefix_len=prefix_len,
+                  softcap=cfg.attn_logit_softcap,
+                  block_kv=_decode_block_kv())  # kernels clamp to cache_len
+        mesh = seq_shard_mesh(cache_len)
+        if mesh is not None:
+            o = sharded_flash_decode(q, new_cache["k"], new_cache["v"],
+                                     pos_new, pos, mesh, **kw)
+        else:
+            o = ops.flash_decode(q, new_cache["k"], new_cache["v"],
+                                 pos_new, pos, **kw)
+    else:
+        # legacy path: full-cache dequant + naive sdpa (A/B baseline only;
+        # the blockwise scales-aware sdpa is reachable via block_kv > 0)
+        if int8:
+            k_full = _dequant_kv(new_cache["k"], new_cache["k_scale"],
+                                 q.dtype)
+            v_full = _dequant_kv(new_cache["v"], new_cache["v_scale"],
+                                 q.dtype)
+        else:
+            k_full, v_full = new_cache["k"], new_cache["v"]
+        o = sdpa(q, k_full, v_full,
+                 q_pos=jnp.full((B, 1), pos, jnp.int32), kv_pos=pos_new,
+                 kind=kind, window=window, prefix_len=prefix_len,
+                 softcap=cfg.attn_logit_softcap)
     y = dense(params["wo"], o.reshape(B, 1, -1))
     return y, new_cache
 
 
 def attn_cross_decode(params, cfg, x_t, mem_k, mem_v, mem_pos):
     """Cross-attention decode step against fixed encoder memory (k/v
-    precomputed at prefill)."""
+    precomputed at prefill).  Same fused decode path as self-attention
+    (kind="full": every valid memory slot participates)."""
     B = x_t.shape[0]
     dh = cfg.resolved_head_dim()
     q = dense(params["wq"], x_t).reshape(B, 1, cfg.num_heads, dh)
     if cfg.qk_norm:
         q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+    from repro.kernels import ops
+    if ops.flash_decode_enabled():
+        return dense(params["wo"], ops.flash_decode(
+            q, mem_k, mem_v, mem_pos, jnp.zeros((), jnp.int32),
+            kind="full", softcap=cfg.attn_logit_softcap,
+            block_kv=_decode_block_kv()).reshape(B, 1, -1))
     o = sdpa(q, mem_k, mem_v,
              q_pos=jnp.zeros((B, 1), jnp.int32), kv_pos=mem_pos,
              kind="full", softcap=cfg.attn_logit_softcap)

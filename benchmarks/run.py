@@ -22,12 +22,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (table2,table3,fig2,fig3,"
-                         "fig5,fig6,kernels,roofline)")
+                         "fig5,fig6,kernels,serving,roofline)")
     args = ap.parse_args()
 
     from benchmarks import (fig2_lookback, fig3_convergence,
                             fig5_comm_overhead, fig6_ablation, kernels_bench,
-                            table2_forecasting, table3_federated)
+                            serving_bench, table2_forecasting,
+                            table3_federated)
 
     suites = {
         "table2": table2_forecasting.run,      # Table 2: MSE/MAE grid
@@ -37,6 +38,7 @@ def main() -> None:
         "fig5": fig5_comm_overhead.run,        # Fig 5: comm overhead
         "fig6": fig6_ablation.run,             # Fig 6: ablation
         "kernels": kernels_bench.run,          # kernel microbench
+        "serving": serving_bench.run,          # engine vs sequential
     }
     only = set(filter(None, args.only.split(",")))
 
@@ -53,6 +55,10 @@ def main() -> None:
                 with open("BENCH_kernels.json", "w") as f:
                     json.dump({"full": args.full, "rows": rows}, f, indent=2)
                 print("# wrote BENCH_kernels.json", flush=True)
+            if name == "serving" and rows:
+                with open("BENCH_serving.json", "w") as f:
+                    json.dump({"full": args.full, "rows": rows}, f, indent=2)
+                print("# wrote BENCH_serving.json", flush=True)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1

@@ -19,6 +19,12 @@ prefix masks are position-local facts.
 mesh is active, the ``model`` axis is real, the layout is ``seq``, and the
 cache length divides — otherwise ``attn_decode`` stays on the single-shard
 kernel and XLA handles whatever layout the arrays actually have.
+
+Ragged continuous-batching steps (``repro.serve.engine``) take this same
+path unchanged: ``q_pos`` is per-batch ((B,), sharded over the batch axes
+like the queries), so per-slot positions — including the ``-1`` inactive
+marker, which fully masks a lane — are shard-local facts exactly like
+``kv_pos``; the (m, l, acc) combine is oblivious to which lanes are live.
 """
 
 from __future__ import annotations

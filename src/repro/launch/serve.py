@@ -1,13 +1,25 @@
-"""Serving launcher: prefill a batch of prompts, then decode N tokens with
-the same serve_step the dry-run lowers.
+"""Serving launcher: fixed-batch decode or the continuous-batching engine.
+
+Fixed batch (the dry-run shape — one prefill, synchronous decode):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
       --batch 4 --prompt-len 64 --gen 32
+
+Engine (request-level continuous batching over the same compiled step):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --engine \
+      --slots 4 --trace 8 --arrival-rate 0.5 --gen 32
+
+``--trace N`` synthesizes N requests with Poisson arrivals and mixed prompt
+lengths; ``--requests FILE`` replays a JSON trace instead (a list of
+objects with ``prompt`` or ``prompt_len``, ``max_new_tokens``, and optional
+``arrival_step`` / ``temperature`` / ``top_k`` / ``top_p`` / ``seed``).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -20,36 +32,96 @@ from repro.launch.steps import make_serve_step
 from repro.models.registry import get_model, train_batch_shapes
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ALL_ARCHS, default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--full-config", dest="smoke", action="store_false")
-    args = ap.parse_args()
+def make_trace(cfg, n: int, *, gen: int, max_prompt: int, rate: float,
+               seed: int = 0):
+    """Synthetic Poisson request trace (arrival steps, mixed prompt
+    lengths) as plain dicts — shared with benchmarks/serving_bench.py."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.floor(np.cumsum(rng.exponential(1.0 / max(rate, 1e-6),
+                                                  n))).astype(int)
+    out = []
+    for i in range(n):
+        plen = int(rng.integers(max(4, max_prompt // 4), max_prompt + 1))
+        out.append({
+            "id": f"req{i}",
+            "prompt": rng.integers(0, cfg.vocab_size, plen).tolist(),
+            "max_new_tokens": gen,
+            "arrival_step": int(arrivals[i]),
+        })
+    return out
 
-    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
-    print(f"decode path: {ops.decode_mode()}")
-    api = get_model(cfg)
-    params = api.init(cfg, jax.random.PRNGKey(0))
-    B, P = args.batch, args.prompt_len
-    total = P + args.gen
+
+def load_trace(path: str, cfg, *, gen: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, r in enumerate(json.load(open(path))):
+        prompt = r.get("prompt")
+        if prompt is None:
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  int(r["prompt_len"])).tolist()
+        out.append({**r, "id": r.get("id", f"req{i}"), "prompt": prompt,
+                    "max_new_tokens": int(r.get("max_new_tokens", gen)),
+                    "arrival_step": int(r.get("arrival_step", 0))})
+    return out
+
+
+def _to_request(r: dict):
+    from repro.serve import Request, SamplingParams
+    return Request(
+        id=r["id"], prompt=np.asarray(r["prompt"], np.int32),
+        max_new_tokens=r["max_new_tokens"],
+        arrival_step=r.get("arrival_step", 0),
+        eos_id=r.get("eos_id"),
+        sampling=SamplingParams(
+            temperature=float(r.get("temperature", 0.0)),
+            top_k=int(r.get("top_k", 0)),
+            top_p=float(r.get("top_p", 0.0)),
+            seed=int(r.get("seed", 0))))
+
+
+def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
+               max_tokens_in_flight: int = 0, prefill_chunk: int = 0,
+               prefill_bucket: int = 0, quiet: bool = False):
+    from repro.serve import ForecastEngine
+    engine = ForecastEngine(cfg, params, num_slots=slots,
+                            cache_len=cache_len,
+                            max_tokens_in_flight=max_tokens_in_flight,
+                            prefill_chunk=prefill_chunk,
+                            prefill_bucket=prefill_bucket)
+    for r in trace:
+        engine.submit(_to_request(r))
+    done = engine.run()
+    summ = engine.metrics.summary()
+    if not quiet:
+        print(f"engine: {summ['requests']} requests, "
+              f"{summ['decode_tokens']} tokens in {summ['decode_steps']} "
+              f"steps ({summ['tok_per_s']:.1f} tok/s aggregate, "
+              f"{summ['steady_tok_per_s']:.1f} tok/s steady decode)")
+        print(f"        mean TTFT {summ['mean_ttft_s'] * 1e3:.0f}ms, "
+              f"occupancy {summ['mean_occupancy']:.2f}, "
+              f"compiled serve_step signatures: "
+              f"{engine.num_step_signatures()}")
+    return done, summ, engine
+
+
+def run_fixed_batch(cfg, params, api, *, batch: int, prompt_len: int,
+                    gen: int) -> None:
+    B, P = batch, prompt_len
+    total = P + gen
 
     rng = np.random.default_rng(0)
-    batch = {}
+    fb = {}
     shapes = train_batch_shapes(cfg, B, P)
     shapes.pop("labels")
     for k, (shp, dt) in shapes.items():
         if dt == jnp.int32:
-            batch[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, shp),
-                                   jnp.int32)
+            fb[k] = jnp.asarray(rng.integers(0, cfg.vocab_size, shp),
+                                jnp.int32)
         else:
-            batch[k] = jnp.zeros(shp, dt)
+            fb[k] = jnp.zeros(shp, dt)
 
     t0 = time.time()
-    cache, logits = api.prefill(params, cfg, batch, cache_len=total)
+    cache, logits = api.prefill(params, cfg, fb, cache_len=total)
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
     print(f"prefill: {B}x{P} in {t_prefill:.2f}s "
@@ -58,10 +130,20 @@ def main() -> None:
     serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
     tok = jnp.argmax(logits[:, -1:, :], -1).astype(jnp.int32)
     generated = [np.asarray(tok)]
-    t0 = time.time()
     # prompt positions vary per family (vlm prepends image tokens)
     pos0 = P + (cfg.vlm.num_image_tokens if cfg.family == "vlm" else 0)
-    for i in range(args.gen):
+
+    # warmup: the first step carries jit compile time — time it apart so
+    # the reported decode throughput is steady-state
+    t0 = time.time()
+    tok, cache = serve(params, cache,
+                       {"token": tok, "pos": jnp.asarray(pos0, jnp.int32)})
+    jax.block_until_ready(tok)
+    t_warm = time.time() - t0
+    generated.append(np.asarray(tok))
+
+    t0 = time.time()
+    for i in range(1, gen):
         tok, cache = serve(params, cache,
                            {"token": tok, "pos": jnp.asarray(pos0 + i,
                                                              jnp.int32)})
@@ -69,9 +151,62 @@ def main() -> None:
     jax.block_until_ready(tok)
     dt = time.time() - t0
     out = np.concatenate(generated, axis=1)
-    print(f"decode: {args.gen} steps x {B} seqs in {dt:.2f}s "
-          f"({B * args.gen / dt:.1f} tok/s)")
+    steady = B * (gen - 1) / dt if gen > 1 else 0.0
+    print(f"decode warmup (incl. jit): 1 step x {B} seqs in {t_warm:.2f}s")
+    print(f"decode steady-state: {gen - 1} steps x {B} seqs in {dt:.2f}s "
+          f"({steady:.1f} tok/s)")
     print(f"sample continuation (seq 0): {out[0][:16].tolist()}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS, default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full-config", dest="smoke", action="store_false")
+    # engine mode
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine instead of one fixed "
+                         "batch")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=0,
+                    help="per-slot ring length (default prompt+gen)")
+    ap.add_argument("--trace", type=int, default=0,
+                    help="synthesize N Poisson-arrival requests")
+    ap.add_argument("--requests", default="",
+                    help="JSON request trace file (see module docstring)")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="mean arrivals per engine step (--trace)")
+    ap.add_argument("--max-tokens-in-flight", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--prefill-bucket", type=int, default=0)
+    ap.add_argument("--trace-seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    print(f"decode path: {ops.decode_mode()}")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+
+    if args.engine:
+        if args.requests:
+            trace = load_trace(args.requests, cfg, gen=args.gen,
+                               seed=args.trace_seed)
+        else:
+            trace = make_trace(cfg, args.trace or 8, gen=args.gen,
+                               max_prompt=args.prompt_len,
+                               rate=args.arrival_rate, seed=args.trace_seed)
+        cache_len = args.cache_len or max(
+            len(r["prompt"]) + r["max_new_tokens"] for r in trace)
+        run_engine(cfg, params, trace, slots=args.slots, cache_len=cache_len,
+                   max_tokens_in_flight=args.max_tokens_in_flight,
+                   prefill_chunk=args.prefill_chunk,
+                   prefill_bucket=args.prefill_bucket)
+    else:
+        run_fixed_batch(cfg, params, api, batch=args.batch,
+                        prompt_len=args.prompt_len, gen=args.gen)
 
 
 if __name__ == "__main__":

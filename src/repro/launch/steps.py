@@ -120,18 +120,53 @@ def make_prefill_step(cfg: ModelConfig, *, force_window: int = 0):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, *, force_window: int = 0):
+def make_serve_step(cfg: ModelConfig, *, force_window: int = 0,
+                    sampling: bool = False):
     """One-token decode step.  Attention over the ring cache runs the fused
     flash-decode path (Pallas on TPU, blockwise XLA elsewhere; int8 caches
     dequantized tile-by-tile in the streamed pass); REPRO_FLASH_DECODE=0
-    restores the legacy dequantize-then-sdpa step for A/B comparison."""
+    restores the legacy dequantize-then-sdpa step for A/B comparison.
+
+    Two batch layouts share the one compiled step:
+
+      * synchronous: ``{"token": (B,1), "pos": scalar}`` — every row at the
+        same position (the fixed-batch launcher / dry-run shape).
+      * ragged (continuous batching): ``pos`` is (B,) with per-slot
+        positions, ``-1`` marking inactive lanes.  Inactive lanes are fully
+        masked in attention, their cache lanes are frozen (SSM states
+        included), and their token passes through unchanged — batch
+        composition changes step to step without re-jit.
+
+    ``sampling=True`` additionally reads per-slot ``temperature``/``top_k``/
+    ``top_p`` ((B,) arrays), base PRNG keys ``key`` ((B, 2) uint32) and
+    per-slot sample counters ``t`` ((B,)), routing logits through
+    ``repro.serve.sampling.sample_vec`` (rows with temperature <= 0 stay
+    greedy — bit-identical to the argmax path)."""
     api = get_model(cfg)
 
     def serve_step(params, cache, batch):
-        logits, cache = api.decode_step(params, cfg, cache, batch,
-                                        force_window=force_window)
-        next_token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-        return next_token.astype(jnp.int32), cache
+        pos = jnp.asarray(batch["pos"], jnp.int32)
+        logits, new_cache = api.decode_step(params, cfg, cache, batch,
+                                            force_window=force_window)
+        lg = logits[:, -1, :]
+        if sampling:
+            from repro.serve.sampling import sample_vec
+            keys = jax.vmap(jax.random.fold_in)(batch["key"], batch["t"])
+            next_token = sample_vec(keys, lg,
+                                    temperature=batch["temperature"],
+                                    top_k=batch["top_k"],
+                                    top_p=batch["top_p"])[:, None]
+        else:
+            next_token = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
+        if pos.ndim == 1:
+            from repro.serve.cache_pool import (cache_batch_axes,
+                                                freeze_inactive)
+            active = pos >= 0
+            new_cache = freeze_inactive(cache, new_cache, active,
+                                        cache_batch_axes(api, cfg))
+            next_token = jnp.where(active[:, None], next_token,
+                                   batch["token"])
+        return next_token, new_cache
 
     return serve_step
 

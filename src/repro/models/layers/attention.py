@@ -298,7 +298,10 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
                 kind: str = "causal", prefix_len=None):
     """One decode step.
 
-    x_t: (B, 1, d_in); ``pos`` scalar int32 (synchronous batch decode);
+    x_t: (B, 1, d_in); ``pos`` scalar int32 (synchronous batch decode) OR
+    (B,) int32 per-row positions (ragged continuous-batching decode: every
+    row advances independently; ``pos[b] == -1`` marks row ``b`` inactive —
+    its ring slot is left untouched and its output is fully masked).
     cache: ring buffer from ``init_attn_cache`` (cache_len == window for SWA
     layers, == max_seq for global layers).  Returns (y_t, new_cache).
 
@@ -315,16 +318,38 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
     cache_len = cache["k"].shape[1]
     int8 = "k_scale" in cache
     pos = jnp.asarray(pos, jnp.int32)
+    ragged = pos.ndim == 1
+    pos_b = pos[:, None] if ragged else jnp.full((B, 1), pos, jnp.int32)
     q, k_t, v_t = _project_qkv(
         params, cfg, x_t, None,
-        positions=jnp.full((B, 1), pos, jnp.int32),
-        kv_positions=jnp.full((B, 1), pos, jnp.int32),
-        use_rope=True)
-    slot = jnp.mod(pos, cache_len)
+        positions=pos_b, kv_positions=pos_b, use_rope=True)
 
-    def upd(buf, val):
-        return jax.lax.dynamic_update_slice_in_dim(
-            buf, val.astype(buf.dtype), slot, axis=1)
+    if ragged:
+        # per-row ring slot: every row writes its own slot; inactive rows
+        # (pos < 0) keep the old slot contents and stay fully masked below
+        active = pos >= 0
+        slots = jnp.mod(jnp.maximum(pos, 0), cache_len)        # (B,)
+        bidx = jnp.arange(B)
+
+        def upd(buf, val):
+            old = buf[bidx, slots]                             # (B, ...)
+            keep = active.reshape((B,) + (1,) * (old.ndim - 1))
+            return buf.at[bidx, slots].set(
+                jnp.where(keep, val[:, 0].astype(buf.dtype), old))
+
+        def upd_pos(buf):
+            old = buf[bidx, slots]
+            return buf.at[bidx, slots].set(jnp.where(active, pos, old))
+    else:
+        slot = jnp.mod(pos, cache_len)
+
+        def upd(buf, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), slot, axis=1)
+
+        def upd_pos(buf):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, jnp.full((B, 1), pos, jnp.int32), slot, axis=1)
 
     new_cache = {}
     if int8:
@@ -337,8 +362,7 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
     else:
         new_cache["k"] = upd(cache["k"], k_t)
         new_cache["v"] = upd(cache["v"], v_t)
-    pos_new = jax.lax.dynamic_update_slice_in_dim(
-        cache["kv_pos"], jnp.full((B, 1), pos, jnp.int32), slot, axis=1)
+    pos_new = upd_pos(cache["kv_pos"])
     new_cache["kv_pos"] = pos_new
 
     from repro.kernels import ops
@@ -367,7 +391,7 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
         else:
             k_full, v_full = new_cache["k"], new_cache["v"]
         o = sdpa(q, k_full, v_full,
-                 q_pos=jnp.full((B, 1), pos, jnp.int32), kv_pos=pos_new,
+                 q_pos=pos_b, kv_pos=pos_new,
                  kind=kind, window=window, prefix_len=prefix_len,
                  softcap=cfg.attn_logit_softcap)
     y = dense(params["wo"], o.reshape(B, 1, -1))

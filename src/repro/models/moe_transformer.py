@@ -106,8 +106,8 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, force_window: int = 0,
-            cache_len: int = 0):
-    from repro.models.transformer import _scatter_ring
+            cache_len: int = 0, true_len=None):
+    from repro.models.transformer import _finalize_prefill, _scatter_ring
     B, S = tokens.shape
     positions = jnp.arange(S, dtype=jnp.int32)
     x = embed_tokens(params, cfg, tokens)
@@ -131,5 +131,4 @@ def prefill(params, cfg: ModelConfig, tokens, *, force_window: int = 0,
         return _seq_constraint(h + m), c
 
     x, cache = jax.lax.scan(body, _seq_constraint(x), params["layers"])
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    return cache, logits_fn(params, cfg, x[:, -1:, :])
+    return _finalize_prefill(params, cfg, x, cache, true_len)

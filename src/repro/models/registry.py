@@ -34,10 +34,11 @@ def _dense_api():
         h = transformer.forward(params, cfg, batch["tokens"])
         return chunked_ce(h, params, cfg, batch["labels"])
 
-    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0,
+                true_len=None):
         return transformer.prefill(params, cfg, batch["tokens"],
                                    force_window=force_window,
-                                   cache_len=cache_len)
+                                   cache_len=cache_len, true_len=true_len)
 
     def decode_step(params, cfg, cache, batch, *, force_window=0):
         return transformer.decode_step(params, cfg, cache, batch["token"],
@@ -54,10 +55,12 @@ def _moe_api():
         h, aux = moe_transformer.forward(params, cfg, batch["tokens"])
         return chunked_ce(h, params, cfg, batch["labels"]) + aux
 
-    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0,
+                true_len=None):
         return moe_transformer.prefill(params, cfg, batch["tokens"],
                                        force_window=force_window,
-                                       cache_len=cache_len)
+                                       cache_len=cache_len,
+                                       true_len=true_len)
 
     def decode_step(params, cfg, cache, batch, *, force_window=0):
         return moe_transformer.decode_step(params, cfg, cache,
@@ -77,7 +80,11 @@ def _vlm_api():
         h_txt = h[:, nI:, :]
         return chunked_ce(h_txt, params, cfg, batch["labels"])
 
-    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0,
+                true_len=None):
+        if true_len is not None:
+            raise ValueError("prefill bucketing (true_len) is only supported "
+                             "for attention-ring-cache families (dense/moe)")
         return vlm.prefill(params, cfg, batch["patches"], batch["tokens"],
                            force_window=force_window, cache_len=cache_len)
 
@@ -95,7 +102,11 @@ def _encdec_api():
         h = encdec.forward(params, cfg, batch["frames"], batch["tokens"])
         return chunked_ce(h, params, cfg, batch["labels"])
 
-    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0,
+                true_len=None):
+        if true_len is not None:
+            raise ValueError("prefill bucketing (true_len) is only supported "
+                             "for attention-ring-cache families (dense/moe)")
         return encdec.prefill(params, cfg, batch["frames"], batch["tokens"],
                               force_window=force_window,
                               cache_len=cache_len)
@@ -114,7 +125,11 @@ def _ssm_api():
         h = xlstm_model.forward(params, cfg, batch["tokens"])
         return chunked_ce(h, params, cfg, batch["labels"])
 
-    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0,
+                true_len=None):
+        if true_len is not None:
+            raise ValueError("prefill bucketing (true_len) is only supported "
+                             "for attention-ring-cache families (dense/moe)")
         return xlstm_model.prefill(params, cfg, batch["tokens"],
                                    force_window=force_window,
                                    cache_len=cache_len)
@@ -134,7 +149,11 @@ def _hybrid_api():
         h = zamba2.forward(params, cfg, batch["tokens"])
         return chunked_ce(h, params, cfg, batch["labels"])
 
-    def prefill(params, cfg, batch, *, force_window=0, cache_len=0):
+    def prefill(params, cfg, batch, *, force_window=0, cache_len=0,
+                true_len=None):
+        if true_len is not None:
+            raise ValueError("prefill bucketing (true_len) is only supported "
+                             "for attention-ring-cache families (dense/moe)")
         return zamba2.prefill(params, cfg, batch["tokens"],
                               force_window=force_window,
                               cache_len=cache_len)

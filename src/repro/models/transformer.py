@@ -270,12 +270,41 @@ def _scatter_ring(k, v, positions, cache_len):
     return {"k": scatter(k), "v": scatter(v), "kv_pos": cp}
 
 
+def _finalize_prefill(params, cfg: ModelConfig, x, cache, true_len):
+    """Last-token logits + (when ``true_len`` (B,) is given) bucketed-prompt
+    fixup: logits are gathered at row position ``true_len - 1`` (causal
+    masking makes that hidden state independent of the right padding) and
+    ring slots written by pad positions are invalidated (kv_pos -> -1)."""
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps,
+                gemma_style=cfg.post_block_norm)
+    B, S = x.shape[:2]
+    if true_len is None:
+        return cache, logits_fn(params, cfg, x[:, -1:, :])
+    tl = jnp.broadcast_to(jnp.asarray(true_len, jnp.int32).reshape(-1), (B,))
+    last = x[jnp.arange(B), jnp.clip(tl - 1, 0, S - 1)][:, None, :]
+
+    def drop_pad(c):
+        # kv_pos: (L, B, cache_len) — pad slots carry positions >= true_len
+        return {**c, "kv_pos": jnp.where(c["kv_pos"] >= tl[None, :, None],
+                                         -1, c["kv_pos"])}
+
+    if isinstance(cache, dict) and "local" in cache:
+        cache = {"local": drop_pad(cache["local"]),
+                 "global": drop_pad(cache["global"])}
+    else:
+        cache = drop_pad(cache)
+    return cache, logits_fn(params, cfg, last)
+
+
 def prefill(params, cfg: ModelConfig, tokens, *, force_window: int = 0,
-            prefix_len=None, cache_len: int = 0):
+            prefix_len=None, cache_len: int = 0, true_len=None):
     """tokens (B,S) -> (cache, last-token logits (B,1,V)).
 
     Runs the full-sequence trunk block-by-block (scan), capturing each
-    layer's (k, v) into its ring buffer.
+    layer's (k, v) into its ring buffer.  ``true_len`` (B,) marks rows as
+    right-padded to a bucket length: logits come from the last *real* token
+    and pad-written ring slots are masked invalid (the serving engine's
+    prefill-bucketing path — bounds the number of prefill signatures).
     """
     B, S = tokens.shape
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -322,6 +351,4 @@ def prefill(params, cfg: ModelConfig, tokens, *, force_window: int = 0,
             return _seq_constraint(h), c
 
     x, cache = jax.lax.scan(body, _seq_constraint(x), params["layers"])
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps,
-                gemma_style=cfg.post_block_norm)
-    return cache, logits_fn(params, cfg, x[:, -1:, :])
+    return _finalize_prefill(params, cfg, x, cache, true_len)

@@ -1,0 +1,115 @@
+"""Fixed pool of per-slot ring KV / SSM cache lanes.
+
+One donated cache pytree is preallocated for ``num_slots`` lanes
+(``api.init_cache(cfg, num_slots, cache_len)``); a request is "placed" by
+writing its batch-1 prefill cache into lane ``slot`` with a traced
+``dynamic_update_slice`` — slot assignment therefore never re-jits, and the
+pool works unchanged for bf16 and int8 (``REPRO_KV_INT8``) caches and for
+``REPRO_CACHE_SHARD=seq`` layouts (the slot axis of the ring cache is
+untouched; only the batch axis is indexed).
+
+Cache pytrees stack layers OUTSIDE the batch axis (``(L, B, S, Hk, dh)``
+for attention rings, ``(nG, nM, B, ...)`` for SSM states), so the batch
+axis sits at a different depth per family/leaf.  ``cache_batch_axes``
+derives a per-leaf axis map structurally — ``jax.eval_shape`` of
+``init_cache`` at two batch sizes, diffed — instead of hard-coding
+per-family layouts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+
+def cache_batch_axes(api, cfg, *, probe_len: int = 8):
+    """Per-leaf batch-axis pytree for this family's cache layout.
+
+    Abstract-evals ``init_cache`` at batch sizes 1 and 2 and locates the
+    one axis that scaled — no arrays are materialized.
+    """
+    a1 = jax.eval_shape(lambda: api.init_cache(cfg, 1, probe_len))
+    a2 = jax.eval_shape(lambda: api.init_cache(cfg, 2, probe_len))
+
+    def axis_of(x, y):
+        diff = [i for i, (d1, d2) in enumerate(zip(x.shape, y.shape))
+                if d1 != d2]
+        if len(diff) != 1:
+            raise ValueError(f"cannot locate batch axis: {x.shape} vs "
+                             f"{y.shape}")
+        return diff[0]
+
+    return jax.tree.map(axis_of, a1, a2)
+
+
+def _expand(mask, axis: int, ndim: int):
+    """(B,) bool -> broadcastable shape with B at ``axis`` of an
+    ``ndim``-rank leaf."""
+    return mask.reshape((1,) * axis + (-1,) + (1,) * (ndim - axis - 1))
+
+
+def freeze_inactive(old_cache, new_cache, active, axes):
+    """Select ``new_cache`` for active lanes and ``old_cache`` for inactive
+    ones, per leaf at its batch axis — retired/empty slots never drift while
+    other requests decode (SSM states included; the attention ring guards
+    its own writes, recurrent states rely on this select)."""
+    return jax.tree.map(
+        lambda o, n, ax: jnp.where(_expand(active, ax, n.ndim), n, o),
+        old_cache, new_cache, axes)
+
+
+class CachePool:
+    """``num_slots`` cache lanes carved out of one preallocated cache.
+
+    Slot lifecycle is owned by the engine (this class only tracks the free
+    list); ``insert`` is the single compiled entry point — slot index and
+    request cache are traced, so admissions at any slot share one
+    signature.
+    """
+
+    def __init__(self, api, cfg, num_slots: int, cache_len: int, *,
+                 force_window: int = 0, dtype=None):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
+        self.cache = api.init_cache(cfg, num_slots, cache_len,
+                                    force_window=force_window, dtype=dtype)
+        self.axes = cache_batch_axes(api, cfg)
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+
+        def _insert(pool, req_cache, slot):
+            return jax.tree.map(
+                lambda p, r, ax: jax.lax.dynamic_update_slice_in_dim(
+                    p, r.astype(p.dtype), slot, axis=ax),
+                pool, req_cache, self.axes)
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+
+    # -- slot management ----------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def acquire(self) -> int:
+        if not self._free:
+            raise RuntimeError("cache pool exhausted")
+        return self._free.pop()
+
+    def release(self, slot: int) -> None:
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        self._free.append(slot)
+
+    # -- data path ----------------------------------------------------------
+
+    def insert(self, req_cache, slot: int) -> None:
+        """Write a batch-1 prefill cache into lane ``slot`` (traced — one
+        compiled signature for every slot/admission)."""
+        self.cache = self._insert(self.cache, req_cache,
+                                  jnp.asarray(slot, jnp.int32))

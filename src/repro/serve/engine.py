@@ -1,0 +1,271 @@
+"""Continuous-batching forecast-serving engine over the sharded decode path.
+
+The step loop the ROADMAP's top open item asks for: requests are admitted
+FIFO under token budgets (``scheduler``), prefilled into a free lane of the
+preallocated cache pool (``cache_pool``), then decoded *together* by the one
+compiled ragged ``serve_step`` — per-slot positions, per-slot sampling
+params, inactive lanes masked and frozen — until each request hits its
+horizon or stop token and its lane is recycled.  Batch composition changes
+every step; the compiled step signature never does (asserted by
+``num_step_signatures``), which is what lets one jit serve an arbitrary
+request trace.
+
+Decode composes with the whole serving stack: fused flash-decode kernels
+(``REPRO_FLASH_DECODE``), int8 ring caches (``REPRO_KV_INT8``), and
+seq-sharded cache layouts (``REPRO_CACHE_SHARD=seq`` under an active mesh —
+the ragged step runs per-shard with the same pmax/psum combine, since lane
+masking rides on per-slot positions which shard with the cache).
+
+    engine = ForecastEngine(cfg, params, num_slots=8, cache_len=256)
+    engine.submit(Request(id="r0", prompt=toks, max_new_tokens=32))
+    done = engine.run()              # {id: FinishedRequest}
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import make_serve_step
+from repro.models.registry import get_model
+from repro.serve.cache_pool import CachePool
+from repro.serve.metrics import EngineMetrics
+from repro.serve.request import FinishedRequest, GenState, Request
+from repro.serve.sampling import sample_vec
+from repro.serve.scheduler import (FIFOScheduler, SchedulerConfig,
+                                   bucket_len)
+
+# families whose batch dict is {"tokens"} and whose decode path supports
+# per-slot ragged positions (attention rings via attn_decode, SSM states
+# via the serve-step freeze)
+_SERVABLE = ("dense", "moe", "ssm", "hybrid")
+_BUCKETABLE = ("dense", "moe")               # right-pad-safe prefill (causal
+                                             # attention only, no recurrence)
+
+
+class ForecastEngine:
+    """Request-level serving engine: admit -> prefill-into-slot -> batched
+    ragged decode -> retire."""
+
+    def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
+                 cache_len: int = 256, max_tokens_in_flight: int = 0,
+                 prefill_chunk: int = 0, prefill_bucket: int = 0,
+                 force_window: int = 0):
+        if cfg.family not in _SERVABLE:
+            raise ValueError(f"family {cfg.family!r} not servable by the "
+                             f"engine (supported: {_SERVABLE})")
+        if prefill_bucket and cfg.family not in _BUCKETABLE:
+            raise ValueError(f"prefill_bucket requires a causal-attention "
+                             f"prefill (families {_BUCKETABLE}); "
+                             f"{cfg.family!r} carries recurrent state "
+                             f"through pad tokens")
+        self.cfg = cfg
+        self.params = params
+        self.api = get_model(cfg)
+        self.prefill_bucket = prefill_bucket
+        self.force_window = force_window
+        self.pool = CachePool(self.api, cfg, num_slots, cache_len,
+                              force_window=force_window)
+        self.scheduler = FIFOScheduler(SchedulerConfig(
+            max_tokens_in_flight=max_tokens_in_flight,
+            prefill_chunk=prefill_chunk))
+        self.metrics = EngineMetrics(num_slots)
+        self.step_count = 0
+        self.finished: Dict[str, FinishedRequest] = {}
+        self.slots: List[Optional[GenState]] = [None] * num_slots
+        self._submit_time: Dict[str, float] = {}
+
+        # fixed-shape per-slot batch arrays — the ONLY thing the compiled
+        # step sees; host-side admission/eviction just rewrites rows
+        self._tok = np.zeros((num_slots, 1), np.int32)
+        self._pos = np.full((num_slots,), -1, np.int32)
+        self._temp = np.zeros((num_slots,), np.float32)
+        self._topk = np.zeros((num_slots,), np.int32)
+        self._topp = np.zeros((num_slots,), np.float32)
+        self._key = np.zeros((num_slots, 2), np.uint32)
+        self._t = np.zeros((num_slots,), np.int32)
+
+        self._step_fn = jax.jit(
+            make_serve_step(cfg, force_window=force_window, sampling=True),
+            donate_argnums=(1,))
+
+        def _prefill(params, tokens, true_len):
+            return self.api.prefill(params, cfg, {"tokens": tokens},
+                                    cache_len=cache_len,
+                                    force_window=force_window,
+                                    true_len=true_len)
+
+        self._prefill_fn = jax.jit(_prefill)
+
+        def _first(logits, key, temp, top_k, top_p):
+            keys = jax.random.fold_in(key, 0)[None]
+            return sample_vec(keys, logits[:, -1, :], temperature=temp[None],
+                              top_k=top_k[None], top_p=top_p[None])[0]
+
+        self._first_fn = jax.jit(_first)
+
+    # -- public surface ------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        budget = self.scheduler.config.max_tokens_in_flight
+        if budget > 0 and request.total_tokens > budget:
+            # would never admit: run() would spin on it forever
+            raise ValueError(
+                f"request {request.id}: total tokens "
+                f"({request.total_tokens}) exceed max_tokens_in_flight "
+                f"({budget}) — it could never be admitted")
+        # global-attention rings must hold the whole sequence: dense/moe
+        # without a (forced) sliding window, and hybrid, whose attention
+        # layers are always global.  Windowed archs wrap by design; pure
+        # SSM state is O(1).
+        ring_is_global = (
+            self.cfg.family in _BUCKETABLE and self.cfg.sliding_window == 0
+            and not self.force_window) or self.cfg.family == "hybrid"
+        if ring_is_global:
+            footprint = max(
+                request.total_tokens,
+                bucket_len(request.prompt_len, self.prefill_bucket))
+            if footprint > self.pool.cache_len:
+                raise ValueError(
+                    f"request {request.id}: prompt + horizon (bucketed: "
+                    f"{footprint}) exceeds cache_len "
+                    f"({self.pool.cache_len})")
+        self._submit_time[request.id] = time.perf_counter()
+        self.scheduler.submit(request)
+
+    @property
+    def active_requests(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def tokens_in_flight(self) -> int:
+        return sum(s.request.total_tokens for s in self.slots
+                   if s is not None)
+
+    def num_step_signatures(self) -> int:
+        """Compiled serve_step signatures so far — the engine's no-re-jit
+        invariant is that this stays 1 across every admission/eviction."""
+        return self._step_fn._cache_size()
+
+    def step(self) -> None:
+        """One engine tick: admit what fits, then one batched decode."""
+        for req in self.scheduler.admit(
+                now_step=self.step_count,
+                free_slots=self.pool.free_slots,
+                tokens_in_flight=self.tokens_in_flight):
+            self._admit(req)
+        self._decode()
+        self.step_count += 1
+
+    def run(self, max_steps: int = 0) -> Dict[str, FinishedRequest]:
+        """Drive steps until every submitted request retires."""
+        while self.scheduler.pending or self.active_requests:
+            if max_steps and self.step_count >= max_steps:
+                raise RuntimeError(f"engine did not drain within "
+                                   f"{max_steps} steps")
+            self.step()
+        return self.finished
+
+    # -- internals -----------------------------------------------------------
+
+    def _admit(self, req: Request) -> None:
+        slot = self.pool.acquire()
+        P = req.prompt_len
+        Pb = bucket_len(P, self.prefill_bucket)
+        toks = np.zeros((1, Pb), np.int32)
+        toks[0, :P] = req.prompt
+        true_len = (jnp.asarray([P], jnp.int32)
+                    if self.prefill_bucket else None)
+        cache1, logits = self._prefill_fn(self.params, jnp.asarray(toks),
+                                          true_len)
+        self.pool.insert(cache1, slot)
+
+        sp = req.sampling
+        base_key = np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)
+        tok0 = int(self._first_fn(
+            logits, jnp.asarray(base_key),
+            jnp.asarray(sp.temperature, jnp.float32),
+            jnp.asarray(sp.top_k, jnp.int32),
+            jnp.asarray(sp.top_p, jnp.float32)))
+
+        now = time.perf_counter()
+        st = GenState(request=req, slot=slot, pos=P, last_token=tok0,
+                      admitted_step=self.step_count, admitted_time=now)
+        self.metrics.record_admit(P)
+        done = req.max_new_tokens == 1 or tok0 == req.eos_id
+        st.emit(tok0, is_last=done, now=now)
+        if done:
+            self._retire(st, "eos" if tok0 == req.eos_id else "length")
+            return
+        self.slots[slot] = st
+        self._tok[slot, 0] = tok0
+        self._pos[slot] = P
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+        self._key[slot] = base_key
+        self._t[slot] = 1                     # token 0 came from prefill
+
+    def _decode(self) -> None:
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        batch = {
+            "token": jnp.asarray(self._tok),
+            "pos": jnp.asarray(self._pos),
+            "temperature": jnp.asarray(self._temp),
+            "top_k": jnp.asarray(self._topk),
+            "top_p": jnp.asarray(self._topp),
+            "key": jnp.asarray(self._key),
+            "t": jnp.asarray(self._t),
+        }
+        t0 = time.perf_counter()
+        tok, self.pool.cache = self._step_fn(self.params, self.pool.cache,
+                                             batch)
+        tok_np = np.asarray(tok)              # blocks until the step lands
+        self.metrics.record_decode_step(len(active), len(active),
+                                        time.perf_counter() - t0)
+        now = time.perf_counter()
+        for i in active:
+            st = self.slots[i]
+            t = int(tok_np[i, 0])
+            done = st.remaining == 1 or t == st.request.eos_id
+            st.emit(t, is_last=done, now=now)
+            st.pos += 1
+            st.steps_done += 1
+            if done:
+                self._retire(st, "eos" if t == st.request.eos_id
+                             else "length")
+            else:
+                self._tok[i, 0] = t
+                self._pos[i] = st.pos
+                self._t[i] += 1
+
+    def _retire(self, st: GenState, reason: str) -> None:
+        slot = st.slot
+        if self.slots[slot] is st:
+            self.slots[slot] = None
+        self._pos[slot] = -1
+        self._tok[slot, 0] = 0
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+        self._topp[slot] = 0.0
+        self._key[slot] = 0
+        self._t[slot] = 0
+        self.pool.release(slot)
+        ttft = st.first_token_time - self._submit_time.get(
+            st.request.id, st.admitted_time)
+        self.metrics.record_finish(ttft)
+        self.finished[st.request.id] = FinishedRequest(
+            id=st.request.id,
+            tokens=np.asarray(st.generated, np.int32),
+            prompt_len=st.request.prompt_len,
+            admitted_step=st.admitted_step,
+            finished_step=self.step_count,
+            ttft_s=ttft,
+            reason=reason)

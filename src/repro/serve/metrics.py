@@ -1,0 +1,68 @@
+"""Serving metrics: throughput, time-to-first-token, slot occupancy.
+
+Host-side counters only — nothing here enters jit.  The engine calls the
+record hooks; ``summary()`` folds them into the dict that
+``benchmarks/serving_bench.py`` persists to ``BENCH_serving.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    num_slots: int
+    started: float = dataclasses.field(default_factory=time.perf_counter)
+    finished_at: float = 0.0
+    decode_steps: int = 0
+    decode_tokens: int = 0                    # tokens sampled in decode steps
+    prefill_tokens: int = 0                   # real (unpadded) prompt tokens
+    requests_admitted: int = 0
+    requests_finished: int = 0
+    occupancy_sum: float = 0.0                # sum over steps of active/slots
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    first_step_s: float = 0.0                 # jit-compile-laden first step
+    steady_decode_s: float = 0.0              # decode wall time past step 1
+
+    def record_admit(self, prompt_len: int) -> None:
+        self.requests_admitted += 1
+        self.prefill_tokens += prompt_len
+
+    def record_decode_step(self, active: int, tokens_out: int,
+                           elapsed_s: float) -> None:
+        if self.decode_steps == 0:
+            self.first_step_s = elapsed_s
+        else:
+            self.steady_decode_s += elapsed_s
+        self.decode_steps += 1
+        self.decode_tokens += tokens_out
+        self.occupancy_sum += active / max(self.num_slots, 1)
+
+    def record_finish(self, ttft_s: float) -> None:
+        self.requests_finished += 1
+        self.ttft_s.append(ttft_s)
+        self.finished_at = time.perf_counter()
+
+    def summary(self) -> Dict[str, float]:
+        span = (self.finished_at or time.perf_counter()) - self.started
+        steady_steps = max(self.decode_steps - 1, 1)
+        return {
+            "requests": self.requests_finished,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "wall_s": span,
+            "tok_per_s": self.decode_tokens / span if span > 0 else 0.0,
+            # steady-state decode rate: excludes the jit-compile first step
+            "steady_tok_per_s": (
+                self.decode_tokens * (steady_steps / max(self.decode_steps, 1))
+                / self.steady_decode_s if self.steady_decode_s > 0 else 0.0),
+            "mean_ttft_s": (sum(self.ttft_s) / len(self.ttft_s)
+                            if self.ttft_s else 0.0),
+            "max_ttft_s": max(self.ttft_s) if self.ttft_s else 0.0,
+            "mean_occupancy": (self.occupancy_sum / self.decode_steps
+                               if self.decode_steps else 0.0),
+        }

@@ -1,0 +1,96 @@
+"""Request / generation state for the continuous-batching forecast engine.
+
+A ``Request`` is one client's forecast query: a tokenized prompt (the
+quantized history window in the FedTime serving story), a generation
+budget, and per-request sampling parameters.  ``GenState`` is the engine's
+per-slot mutable bookkeeping while the request is in flight; it never
+enters jit — everything the compiled step sees is packed into fixed-shape
+batch arrays by the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+# streaming callback: (request_id, token, is_last) fired per generated token
+StreamFn = Callable[[str, int, bool], None]
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    """Per-request sampling knobs, routed through ``sampling.sample_vec``
+    inside the compiled serve step (arrays, never static — the request mix
+    changes without re-jit).  ``temperature <= 0`` decodes greedily."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    """One forecast-serving request."""
+    id: str
+    prompt: Sequence[int]                     # tokenized history window
+    max_new_tokens: int                       # forecast horizon in tokens
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    eos_id: Optional[int] = None              # optional stop token
+    arrival_step: int = 0                     # earliest engine step admitting
+    stream: Optional[StreamFn] = None         # per-token streaming callback
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError(f"request {self.id}: prompt must be a non-empty "
+                             f"1-D token sequence")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.id}: max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_tokens(self) -> int:
+        """Worst-case footprint: prompt + full horizon (admission budget)."""
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class GenState:
+    """Per-slot in-flight state (host side)."""
+    request: Request
+    slot: int
+    pos: int                                  # position of the NEXT decode
+    last_token: int                           # token fed to the next step
+    generated: List[int] = dataclasses.field(default_factory=list)
+    steps_done: int = 0                       # tokens sampled so far
+    admitted_step: int = 0
+    admitted_time: float = 0.0
+    first_token_time: float = 0.0
+
+    @property
+    def remaining(self) -> int:
+        return self.request.max_new_tokens - len(self.generated)
+
+    def emit(self, token: int, *, is_last: bool, now: float) -> None:
+        if not self.generated:
+            self.first_token_time = now
+        self.generated.append(int(token))
+        if self.request.stream is not None:
+            self.request.stream(self.request.id, int(token), is_last)
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """Engine output record for one retired request."""
+    id: str
+    tokens: np.ndarray                        # (n_generated,) int32
+    prompt_len: int
+    admitted_step: int
+    finished_step: int
+    ttft_s: float                             # admission -> first token
+    reason: str                               # "length" | "eos"

@@ -24,9 +24,13 @@ def sample(key, logits: jnp.ndarray, *, temperature: float = 1.0,
         return greedy(logits)
     logits = logits / temperature
     if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        # clamp to the vocab: top_k > V would index past the sorted logits
+        k_eff = min(int(top_k), logits.shape[-1])
+        kth = jnp.sort(logits, axis=-1)[:, -k_eff][:, None]
         logits = jnp.where(logits < kth, _NEG, logits)
-    if top_p > 0.0:
+    if 0.0 < top_p < 1.0:
+        # top_p >= 1.0 keeps the whole distribution; skipping the cutoff
+        # avoids the degenerate all-excluded row when cumsum rounds past 1
         sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(sorted_logits, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
@@ -36,6 +40,46 @@ def sample(key, logits: jnp.ndarray, *, temperature: float = 1.0,
                          keepdims=True)
         logits = jnp.where(logits < cutoff, _NEG, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_vec(keys, logits: jnp.ndarray, *, temperature, top_k,
+               top_p) -> jnp.ndarray:
+    """Per-row sampling for ragged serving batches: logits (B, V) ->
+    tokens (B,).
+
+    ``keys`` is a (B, 2) uint32 array (one independent PRNG key per row —
+    request isolation: a row's stream never depends on its batch
+    neighbours); ``temperature``/``top_k``/``top_p`` are (B,) arrays so the
+    request mix changes without re-jitting the serve step.  Rows with
+    ``temperature <= 0`` decode greedily; ``top_k`` is clamped to the vocab
+    and ``top_p >= 1`` disables the nucleus cutoff, mirroring ``sample``.
+    """
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temperature = jnp.asarray(temperature, jnp.float32)
+    top_k = jnp.asarray(top_k, jnp.int32)
+    top_p = jnp.asarray(top_p, jnp.float32)
+
+    lg = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    sorted_desc = jnp.sort(lg, axis=-1)[:, ::-1]
+    kk = jnp.clip(top_k, 0, V)
+    kth = sorted_desc[jnp.arange(B), jnp.maximum(kk - 1, 0)][:, None]
+    lg = jnp.where((kk[:, None] > 0) & (lg < kth), _NEG, lg)
+
+    sorted_k = jnp.sort(lg, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(sorted_k, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = cum - probs < top_p[:, None]
+    cutoff = jnp.min(jnp.where(keep, sorted_k, jnp.inf), axis=-1,
+                     keepdims=True)
+    use_p = ((top_p > 0.0) & (top_p < 1.0))[:, None]
+    lg = jnp.where(use_p & (lg < cutoff), _NEG, lg)
+
+    sampled = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row))(keys, lg)
+    return jnp.where(temperature <= 0.0, greedy_tok,
+                     sampled.astype(jnp.int32))
 
 
 def generate(api, params, cfg, cache, first_token, *, steps: int,

@@ -1,0 +1,80 @@
+"""FIFO admission control with prefill chunking for the serving engine.
+
+Two budgets bound what one engine step may admit:
+
+  * ``max_tokens_in_flight`` — worst-case token footprint (prompt + full
+    horizon) summed over resident requests.  Keeps the pool from filling
+    with long-horizon requests that would starve the queue for many steps.
+  * ``prefill_chunk`` — prompt tokens prefillable per engine step.  Prefill
+    is the latency spike of continuous batching (a full forward over the
+    prompt stalls every resident decode); chunking spreads admissions of a
+    burst across steps so resident streams keep ticking.  A prompt longer
+    than the chunk is admitted alone on a fresh step rather than starved.
+
+``bucket_len`` pads prompt lengths up to a bucket multiple so the number of
+distinct compiled prefill signatures stays bounded under arbitrary traces
+(the pad is masked out downstream via ``prefill(..., true_len=...)``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.serve.request import Request
+
+
+def bucket_len(n: int, bucket: int) -> int:
+    """Smallest multiple of ``bucket`` >= n (identity when bucket <= 0)."""
+    if bucket <= 0:
+        return n
+    return -(-n // bucket) * bucket
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    max_tokens_in_flight: int = 0             # 0 == unbounded
+    prefill_chunk: int = 0                    # 0 == unbounded per step
+
+
+class FIFOScheduler:
+    """Arrival-ordered admission: the head request admits as soon as a slot
+    and both budgets allow; later arrivals never jump the queue (no
+    head-of-line reordering — per-cluster fairness is the paper's story,
+    smarter policies can subclass)."""
+
+    def __init__(self, config: Optional[SchedulerConfig] = None):
+        self.config = config or SchedulerConfig()
+        self._queue: Deque[Request] = deque()
+
+    def submit(self, request: Request) -> None:
+        self._queue.append(request)
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def admit(self, *, now_step: int, free_slots: int,
+              tokens_in_flight: int) -> List[Request]:
+        """Pop the FIFO prefix admissible this step."""
+        cfg = self.config
+        out: List[Request] = []
+        prefill_used = 0
+        while self._queue and len(out) < free_slots:
+            req = self._queue[0]
+            if req.arrival_step > now_step:
+                break                          # trace time not reached (FIFO)
+            if cfg.max_tokens_in_flight > 0 and tokens_in_flight + \
+                    req.total_tokens > cfg.max_tokens_in_flight:
+                break
+            if cfg.prefill_chunk > 0 and prefill_used > 0 and \
+                    prefill_used + req.prompt_len > cfg.prefill_chunk:
+                break                          # chunk full — next step
+            out.append(self._queue.popleft())
+            prefill_used += req.prompt_len
+            tokens_in_flight += req.total_tokens
+        return out

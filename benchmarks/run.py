@@ -38,9 +38,13 @@ def main() -> None:
         "fig5": fig5_comm_overhead.run,        # Fig 5: comm overhead
         "fig6": fig6_ablation.run,             # Fig 6: ablation
         "kernels": kernels_bench.run,          # kernel microbench
-        "serving": serving_bench.run,          # engine vs sequential
+        "serving": serving_bench.run,          # engine + paged-pool A/Bs
     }
     only = set(filter(None, args.only.split(",")))
+    unknown = only - set(suites) - {"roofline"}
+    if unknown:
+        ap.error(f"unknown suite(s) {sorted(unknown)}; choose from "
+                 f"{sorted(suites) + ['roofline']}")
 
     failures = 0
     for name, fn in suites.items():

@@ -1,11 +1,19 @@
-"""Serving-engine benchmark: staggered Poisson trace, engine vs sequential.
+"""Serving-engine benchmarks.
 
-The engine's claim is aggregate throughput under concurrent load: on a
-staggered 8-request trace the continuous-batching step loop must beat the
-fixed-batch launcher serving the same requests one after another (the only
-thing the repo could do before the engine existed).  Both paths run the
-same compiled kernels and are warmed before timing, so the delta is pure
-scheduling: ragged batched decode vs sequential single-stream decode.
+Row 1 — engine vs sequential: on a staggered 8-request Poisson trace the
+continuous-batching step loop must beat the fixed-batch launcher serving
+the same requests one after another (the only thing the repo could do
+before the engine existed).  Both paths run the same compiled kernels and
+are warmed before timing, so the delta is pure scheduling.
+
+Row 2 — paged vs contiguous at EQUAL pool bytes: a heterogeneous-length
+trace (few long forecasts + many short ones, the FedTime edge-client mix)
+through the paged block pool and through contiguous lanes backed by the
+same number of cache bytes.  Contiguous concurrency is capped at its lane
+count no matter how small the requests are; the paged pool admits by block
+footprint, so the same bytes hold strictly more requests in flight — the
+row reports the peak-concurrency and aggregate-tok/s ratios, and asserts
+the two engines' greedy outputs are bit-identical.
 
 Rows land in BENCH_serving.json via benchmarks/run.py.
 """
@@ -43,13 +51,107 @@ def _sequential_baseline(api, cfg, params, trace, cache_len):
     return one
 
 
+def _warmed_engine(cfg, params, prompt_lens, probe_prompt, *, slots,
+                   cache_len, **ekw):
+    """Engine with every prefill signature in the trace + the serve/insert/
+    first-token jits warmed, metrics reset — timed runs measure scheduling,
+    not compilation."""
+    from repro.serve import ForecastEngine, Request
+    from repro.serve.metrics import EngineMetrics
+    engine = ForecastEngine(cfg, params, num_slots=slots,
+                            cache_len=cache_len, **ekw)
+    for j, plen in enumerate(sorted(set(prompt_lens))):
+        engine.submit(Request(id=f"warm{j}",
+                              prompt=np.asarray(probe_prompt[:1] * plen,
+                                                np.int32),
+                              max_new_tokens=2))
+    engine.run()
+    offset = engine.step_count                # trace arrivals are relative
+    engine.metrics = EngineMetrics(slots,
+                                   pool_blocks=engine.pool.pool_blocks)
+    engine.finished.clear()                   # drop warmup records
+    return engine, offset
+
+
+def _paged_vs_contiguous_case(full: bool):
+    """Heterogeneous-length trace, equal pool bytes: contiguous lanes vs
+    the paged block pool."""
+    from repro.configs import get_smoke_config
+    from repro.models.registry import get_model
+    from repro.serve import Request
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(1))
+
+    cache_len = 96 if full else 48
+    block = 8
+    contig_slots = 3                          # pool bytes: 3 full lanes
+    paged_slots = 14 if full else 10
+    pool_blocks = contig_slots * (cache_len // block)   # same bytes
+    n_short = 12 if full else 8
+    long_p, long_g = (56, 40) if full else (28, 20)   # == a full lane
+    short_p, short_g = (8, 12) if full else (6, 6)    # a few blocks
+    rng = np.random.default_rng(11)
+    reqs = [("L0", long_p, long_g), ("L1", long_p, long_g)] + [
+        (f"S{i}", short_p, short_g) for i in range(n_short)]
+    prompts = {rid: rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+               for rid, p, _ in reqs}
+
+    def run_one(paged: bool):
+        slots = paged_slots if paged else contig_slots
+        ekw = dict(paged=True, block_size=block,
+                   pool_blocks=pool_blocks) if paged else dict(paged=False)
+        eng, _ = _warmed_engine(cfg, params, [p for _, p, _ in reqs],
+                                prompts["L0"].tolist(), slots=slots,
+                                cache_len=cache_len, **ekw)
+        for rid, _, g in reqs:
+            eng.submit(Request(id=rid, prompt=prompts[rid],
+                               max_new_tokens=g))
+        t0 = time.perf_counter()
+        done = eng.run(max_steps=2000)
+        wall = time.perf_counter() - t0
+        toks = sum(len(f.tokens) for f in done.values())
+        return eng, done, toks / wall
+
+    eng_c, done_c, tps_c = run_one(paged=False)
+    eng_p, done_p, tps_p = run_one(paged=True)
+    mismatches = sum(done_p[rid].tokens.tolist() !=
+                     done_c[rid].tokens.tolist() for rid, _, _ in reqs)
+    sc, sp = eng_c.metrics.summary(), eng_p.metrics.summary()
+    row = {
+        "name": "serving_paged_vs_contiguous",
+        "requests": len(reqs),
+        "cache_len": cache_len,
+        "block_size": block,
+        "pool_blocks": pool_blocks,
+        "contig_slots": contig_slots,
+        "paged_slots": paged_slots,
+        "peak_in_flight_contig": sc["peak_in_flight"],
+        "peak_in_flight_paged": sp["peak_in_flight"],
+        "concurrency_ratio": round(sp["peak_in_flight"]
+                                   / max(sc["peak_in_flight"], 1), 2),
+        "tok_per_s_contig": round(tps_c, 2),
+        "tok_per_s_paged": round(tps_p, 2),
+        "tok_per_s_ratio": round(tps_p / max(tps_c, 1e-9), 3),
+        "mean_block_utilization_contig": round(
+            sc["mean_block_utilization"], 3),
+        "mean_block_utilization_paged": round(
+            sp["mean_block_utilization"], 3),
+        "parked_events": sp["parked_events"],
+        "evictions": sp["evictions"],
+        "greedy_mismatches": mismatches,
+        "serve_step_signatures": eng_p.num_step_signatures(),
+    }
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    return row
+
+
 def run(full: bool = False):
     from repro.configs import get_smoke_config
-    from repro.launch.serve import make_trace, run_engine
+    from repro.launch.serve import make_trace
     from repro.models.registry import get_model
-    from repro.serve import ForecastEngine
     from repro.serve.request import Request, SamplingParams
-    from repro.serve.metrics import EngineMetrics
 
     cfg = get_smoke_config("qwen3-0.6b")
     api = get_model(cfg)
@@ -63,20 +165,10 @@ def run(full: bool = False):
     cache_len = max(len(r["prompt"]) + r["max_new_tokens"] for r in trace)
     slots = 4
 
-    # --- engine: warm EVERY prefill signature in the trace (one request
-    # per distinct prompt length) + the serve/insert/first-token jits, so
-    # the timed run measures scheduling, not compilation ---
-    engine = ForecastEngine(cfg, params, num_slots=slots,
-                            cache_len=cache_len)
-    for j, plen in enumerate(sorted({len(r["prompt"]) for r in trace})):
-        engine.submit(Request(id=f"warm{j}",
-                              prompt=np.asarray(trace[0]["prompt"][:1] * plen,
-                                                np.int32),
-                              max_new_tokens=2))
-    engine.run()
-    offset = engine.step_count                # trace arrivals are relative
-    engine.metrics = EngineMetrics(slots)
-    engine.finished.clear()                   # drop warmup records
+    engine, offset = _warmed_engine(cfg, params,
+                                    [len(r["prompt"]) for r in trace],
+                                    trace[0]["prompt"], slots=slots,
+                                    cache_len=cache_len)
     for r in trace:
         engine.submit(Request(
             id=r["id"], prompt=np.asarray(r["prompt"], np.int32),
@@ -122,7 +214,7 @@ def run(full: bool = False):
         "greedy_mismatches": mismatches,
     }
     print(",".join(f"{k}={v}" for k, v in row.items()))
-    return [row]
+    return [row, _paged_vs_contiguous_case(full)]
 
 
 if __name__ == "__main__":

@@ -1,14 +1,14 @@
-"""Fused flash-decode Pallas TPU kernel over the ring KV cache.
+"""Fused flash-decode Pallas TPU kernel over ring or paged block KV caches.
 
 One decode step: G grouped queries per KV head attend to every valid slot of
-the ring buffer.  Grid is (batch, kv_head, KV blocks); the KV axis is
-innermost, so each program streams one ``block_kv`` cache tile through VMEM
-while a running (m, l, acc) online-softmax state persists in scratch.  The
-KV axis is further carved into ``n_splits`` independent splits: each split
-flushes its own partial (m, l, acc) and a final cross-split combine (plain
-jnp — the payload is n_splits x G x D per head) produces the output.  This
-split-KV shape is what makes single-token decode fill the chip: without it,
-one (batch, head) pair maps to one core-sequential stream.
+the cache.  Grid is (batch, kv_head, KV blocks); the KV axis is innermost,
+so each program streams one cache tile through VMEM while a running
+(m, l, acc) online-softmax state persists in scratch.  The KV axis is
+further carved into ``n_splits`` independent splits: each split flushes its
+own partial (m, l, acc) and a final cross-split combine (plain jnp — the
+payload is n_splits x G x D per head) produces the output.  This split-KV
+shape is what makes single-token decode fill the chip: without it, one
+(batch, head) pair maps to one core-sequential stream.
 
 Fused into the streamed pass:
   - int8 -> f32 dequantization from the per-slot absmax scales
@@ -19,13 +19,32 @@ Fused into the streamed pass:
   - GQA query-group packing: the G queries of one KV head are one
     (G, block_kv) MXU matmul instead of G vector products.
 
-Cache layout note: the ring cache lives as (B, S, Hk, dh).  The kernel views
-k/v as (B, S, Hk*dh) — a free row-major reshape — so each BlockSpec block is
-a well-tiled (block_kv, dh) slab; no transpose of the cache is ever made.
+Two cache layouts share the kernel body:
 
-``flash_decode_xla`` is the same algorithm as a ``jax.lax.scan`` over KV
-blocks (the non-TPU fallback: fused blockwise dequant, no full-cache
-materialization).  Both support ``return_partials`` for the sequence-sharded
+  * contiguous ring (the training / fixed-batch shape): k/v are
+    (B, S, Hk, dh) per-request rings, one tile is a ``block_kv`` slice.
+  * paged block pool (the serving engine's layout): k/v are
+    (n_blocks, block_size, Hk, dh) — ONE pool shared by every request —
+    and ``block_tables`` (B, T) maps each request's logical block j to a
+    physical pool block (-1 == not granted).  The table is a
+    scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``): the BlockSpec
+    index_map dereferences it, so each program DMAs exactly the tile the
+    table names — the pool is never gathered in HBM.  Ungranted entries
+    stream pool block 0 and are masked wholesale in-kernel.  On real TPUs
+    ``block_size`` should be a multiple of the 128-lane tile; the serving
+    smoke configs use smaller blocks under interpret mode.
+
+Block policy (``block_kv``/``n_splits`` <= 0 selects it): tile and split
+counts are derived from the cache length instead of fixed defaults —
+short caches get fewer, wider tiles; long caches cap the tile at 1024 and
+let ``_pick_splits`` fill the chip.  ``flash_decode_xla`` is the same
+algorithm without Pallas, with a measured two-regime policy: up to
+``REPRO_DECODE_WIDE_MAX`` (4096) slots a single-pass "wide" form (int8
+codes transposed *before* dequant — half the transpose traffic of
+dequant-then-transpose, the reason the old blockwise scan lost to naive
+sdpa at 4k; it does materialize one O(S) f32 copy, the accepted trade at
+short S), above it a ``jax.lax.scan`` over 2048-slot tiles with in-scan
+dequant (O(block) temporaries).  Both support ``return_partials`` for the sequence-sharded
 path (``repro.dist.decode``): a shard computes local (m, l, acc) over its
 slots and the cross-shard combine is a pmax/psum over the ``model`` axis.
 """
@@ -43,6 +62,20 @@ from jax.experimental.pallas import tpu as pltpu
 # -inf) = nan) on fully-masked blocks; with a finite floor the masked
 # probabilities are zeroed explicitly and every carry stays finite.
 _NEG = -1e30
+
+# XLA-fallback policy boundary: at/below this cache length the single-pass
+# wide form beats the blockwise scan (measured on the kernels bench: the
+# scan's per-block overhead + full-cache transpose lost to naive sdpa at 4k,
+# 0.5x); above it the scan's O(block) temporaries win (1.4x at 32k).  The
+# wide form deliberately trades an O(S) f32 temporary for speed, so the
+# boundary stays at the measured 4k crossover and is env-tunable
+# (REPRO_DECODE_WIDE_MAX=0 restores scan-always for memory-tight hosts).
+_SCAN_BLOCK_KV = 2048
+
+
+def _wide_max_s() -> int:
+    import os
+    return int(os.environ.get("REPRO_DECODE_WIDE_MAX", "4096"))
 
 
 def _slot_mask(kp, qp, plen, *, kind: str, window: int):
@@ -75,6 +108,15 @@ def _pick_splits(n_blocks: int, requested: int) -> int:
     return n
 
 
+def _auto_block_kv(S: int) -> int:
+    """Pallas KV tile from the cache length: target ~16 tiles (split-KV
+    parallelism) without dropping below the 128-lane tile or ballooning
+    VMEM past a 1024-slot slab."""
+    per = -(-S // 16)
+    per = -(-per // 128) * 128
+    return int(max(128, min(1024, per)))
+
+
 def _combine(m, l, acc, axis: int):
     """Merge independent online-softmax partials along ``axis``:
     out = sum_i exp(m_i - m*) acc_i / sum_i exp(m_i - m*) l_i."""
@@ -85,17 +127,46 @@ def _combine(m, l, acc, axis: int):
     return acc_tot / jnp.maximum(l_tot, 1e-30)
 
 
+def paged_gather(k, v, kv_pos, k_scale, v_scale, block_tables):
+    """Materialize the (B, T*block_size) logical cache view of a paged pool.
+
+    k/v: (n_blocks, bs, Hk, dh) pool; block_tables: (B, T) physical block
+    ids (-1 == ungranted — its slots come back with position -1, i.e.
+    masked).  The gathered view is bit-identical to the contiguous ring it
+    replaces when T*bs equals the ring length, which is what keeps paged
+    greedy decode exactly equal to the contiguous pool's.  (Off-TPU
+    fallback + oracle only — the Pallas kernel indexes the pool in place.)
+    """
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    B, T = tbl.shape
+    nb = k.shape[0]
+    safe = jnp.clip(tbl, 0, nb - 1)
+
+    def g(x):
+        y = x[safe]                              # (B, T, bs, ...)
+        return y.reshape((B, T * x.shape[1]) + x.shape[2:])
+
+    kv_pos_g = jnp.where(tbl[:, :, None] >= 0, kv_pos[safe], -1)
+    kv_pos_g = kv_pos_g.reshape(B, T * kv_pos.shape[1])
+    ks = g(k_scale) if k_scale is not None else None
+    vs = g(v_scale) if v_scale is not None else None
+    return g(k), g(v), kv_pos_g, ks, vs
+
+
 # ---------------------------------------------------------------------------
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _kernel(qpos_ref, plen_ref, q_ref, k_ref, v_ref, kpos_ref, *rest,
-            bps: int, kind: str, window: int, softcap: float, scale: float,
-            quantized: bool):
+def _kernel(*refs, bps: int, kind: str, window: int, softcap: float,
+            scale: float, quantized: bool, paged: bool):
+    if paged:
+        tbl_ref, *refs = refs                    # scalar-prefetch operand
     if quantized:
-        ks_ref, vs_ref, o_m, o_l, o_acc, m_s, l_s, acc_s = rest
+        (qpos_ref, plen_ref, q_ref, k_ref, v_ref, kpos_ref, ks_ref, vs_ref,
+         o_m, o_l, o_acc, m_s, l_s, acc_s) = refs
     else:
-        o_m, o_l, o_acc, m_s, l_s, acc_s = rest
+        (qpos_ref, plen_ref, q_ref, k_ref, v_ref, kpos_ref,
+         o_m, o_l, o_acc, m_s, l_s, acc_s) = refs
     j = pl.program_id(2)
     local = jax.lax.rem(j, bps)
 
@@ -118,6 +189,10 @@ def _kernel(qpos_ref, plen_ref, q_ref, k_ref, v_ref, kpos_ref, *rest,
     kp = kpos_ref[...]                               # (1, block_kv)
     mask = _slot_mask(kp, qpos_ref[0, 0], plen_ref[0, 0],
                       kind=kind, window=window)      # (1, block_kv)
+    if paged:
+        # ungranted table entries stream pool block 0 — drop them wholesale
+        # (a freed block's stale kv_pos may otherwise pass the ring mask)
+        mask = mask & (tbl_ref[pl.program_id(0), j] >= 0)
     s = jnp.where(mask, s, _NEG)
 
     m_prev = m_s[...]                                # (G, 1)
@@ -136,17 +211,23 @@ def _kernel(qpos_ref, plen_ref, q_ref, k_ref, v_ref, kpos_ref, *rest,
         o_acc[0, 0, 0] = acc_s[...]
 
 
-def _pad_inputs(q, k, v, kv_pos, k_scale, v_scale, block_kv: int):
-    """Pad the KV axis to a block multiple (padded slots get position -1 so
-    the validity mask drops them) and pack queries per KV head, G padded to
-    the f32 sublane count."""
-    B, S, Hk, D = k.shape
-    H = q.shape[2]
+def _pack_queries(q, Hk: int):
+    """(B, 1, H, D) -> (B, Hk, G_pad, D): GQA groups packed per KV head, G
+    padded to the f32 sublane count."""
+    B, _, H, D = q.shape
     G = H // Hk
-    g_pad = -G % 8
     qg = q.reshape(B, Hk, G, D)
+    g_pad = -G % 8
     if g_pad:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad), (0, 0)))
+    return qg, G, G + g_pad
+
+
+def _pad_inputs(q, k, v, kv_pos, k_scale, v_scale, block_kv: int):
+    """Pad the KV axis to a block multiple (padded slots get position -1 so
+    the validity mask drops them) and pack queries per KV head."""
+    B, S, Hk, D = k.shape
+    qg, G, G_pad = _pack_queries(q, Hk)
     s_pad = -S % block_kv
     if s_pad:
         pad4 = ((0, 0), (0, s_pad), (0, 0), (0, 0))
@@ -155,7 +236,7 @@ def _pad_inputs(q, k, v, kv_pos, k_scale, v_scale, block_kv: int):
         if k_scale is not None:
             k_scale = jnp.pad(k_scale, pad4)
             v_scale = jnp.pad(v_scale, pad4)
-    return qg, k, v, kv_pos, k_scale, v_scale, G, G + g_pad
+    return qg, k, v, kv_pos, k_scale, v_scale, G, G_pad
 
 
 def _broadcast_pos(x, batch: int):
@@ -164,26 +245,78 @@ def _broadcast_pos(x, batch: int):
                             (batch, 1)).astype(jnp.int32)
 
 
+def _partial_outputs(B: int, Hk: int, n_splits: int, G_pad: int, D: int,
+                     bps: int):
+    """(out_specs, out_shape, scratch_shapes) for the per-split (m, l, acc)
+    partials — shared by the contiguous and paged launches (the index_map
+    takes the paged launch's trailing scalar-prefetch table arg as *_)."""
+    def idx(b, h, j, *_, _bps=bps):
+        return (b, h, j // _bps, 0, 0)
+
+    out_specs = [
+        pl.BlockSpec((1, 1, 1, G_pad, 1), idx),
+        pl.BlockSpec((1, 1, 1, G_pad, 1), idx),
+        pl.BlockSpec((1, 1, 1, G_pad, D), idx),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, 1), jnp.float32),
+        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, D), jnp.float32),
+    ]
+    scratch = [
+        pltpu.VMEM((G_pad, 1), jnp.float32),
+        pltpu.VMEM((G_pad, 1), jnp.float32),
+        pltpu.VMEM((G_pad, D), jnp.float32),
+    ]
+    return out_specs, out_shape, scratch
+
+
+def _finish(m, l, acc, G: int, q, return_partials: bool):
+    """Slice off G padding and either combine splits or hand back partials
+    (axis 2 is the split axis)."""
+    m, l, acc = m[:, :, :, :G], l[:, :, :, :G], acc[:, :, :, :G]
+    if return_partials:
+        m_loc = m.max(axis=2)
+        w = jnp.exp(m - m.max(axis=2, keepdims=True))
+        return m_loc, (l * w).sum(axis=2), (acc * w).sum(axis=2)
+    out = _combine(m, l, acc, axis=2)                # (B, Hk, G, D)
+    B, Hk, _, D = out.shape
+    return out.reshape(B, 1, Hk * G, D).astype(q.dtype)
+
+
 @functools.partial(
     jax.jit, static_argnames=("kind", "window", "softcap", "block_kv",
                               "n_splits", "interpret", "return_partials"))
 def flash_decode(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
                  kind: str = "causal", window: int = 0, prefix_len=None,
-                 softcap: float = 0.0, block_kv: int = 512, n_splits: int = 0,
-                 interpret: bool = False, return_partials: bool = False):
-    """One fused decode step against the ring cache.
+                 softcap: float = 0.0, block_kv: int = 0, n_splits: int = 0,
+                 block_tables=None, interpret: bool = False,
+                 return_partials: bool = False):
+    """One fused decode step against the ring (or paged) cache.
 
-    q: (B, 1, H, D); k, v: (B, S, Hk, D) ring buffers (int8 when
-    ``k_scale``/``v_scale`` — (B, S, Hk, 1) absmax scales — are given);
-    kv_pos: (B, S) absolute slot positions (-1 == empty); q_pos: scalar or
-    (B,) query position.  Returns (B, 1, H, D) in q.dtype, or the raw f32
-    partials (m, l, acc) of shapes (B, Hk, G, 1)/(B, Hk, G, 1)/(B, Hk, G, D)
-    when ``return_partials`` (sequence-sharded combine, repro.dist.decode).
+    q: (B, 1, H, D); k, v: (B, S, Hk, D) ring buffers, or — with
+    ``block_tables`` (B, T) — an (n_blocks, block_size, Hk, D) shared pool
+    (int8 when ``k_scale``/``v_scale`` absmax scales are given, shaped like
+    k/v with a trailing 1); kv_pos: (B, S) / (n_blocks, block_size) absolute
+    slot positions (-1 == empty); q_pos: scalar or (B,) query position.
+    ``block_kv``/``n_splits`` <= 0 derive the tile/split counts from the
+    cache length (paged tiles are always one pool block).  Returns
+    (B, 1, H, D) in q.dtype, or the raw f32 partials (m, l, acc) of shapes
+    (B, Hk, G, 1)/(B, Hk, G, 1)/(B, Hk, G, D) when ``return_partials``
+    (sequence-sharded combine, repro.dist.decode).
     """
+    if block_tables is not None:
+        return _flash_decode_paged(
+            q, k, v, kv_pos, block_tables, q_pos, k_scale=k_scale,
+            v_scale=v_scale, kind=kind, window=window, prefix_len=prefix_len,
+            softcap=softcap, n_splits=n_splits, interpret=interpret,
+            return_partials=return_partials)
     B, S, Hk, D = k.shape
     kv_pos = jnp.asarray(kv_pos, jnp.int32)
     if kv_pos.ndim == 1:
         kv_pos = jnp.broadcast_to(kv_pos[None], (B, S))
+    if block_kv <= 0:
+        block_kv = _auto_block_kv(S)
     block_kv = min(block_kv, -(-S // 128) * 128)
     quantized = k_scale is not None
     qg, k, v, kv_pos, k_scale, v_scale, G, G_pad = _pad_inputs(
@@ -194,7 +327,7 @@ def flash_decode(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
     bps = n_blocks // n_splits
 
     # (B, S, Hk, D) -> (B, S, Hk*D): free reshape that turns each per-head
-    # KV tile into a contiguous, well-tiled (block_kv, D) block.
+    # KV tile into a contiguous, well-tiled (block_kv, D) slab.
     kr = k.reshape(B, S_pad, Hk * D)
     vr = v.reshape(B, S_pad, Hk * D)
     qp = _broadcast_pos(q_pos, B)
@@ -216,62 +349,114 @@ def flash_decode(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
         args += [k_scale.reshape(B, S_pad, Hk),
                  v_scale.reshape(B, S_pad, Hk)]
 
-    out_specs = [
-        pl.BlockSpec((1, 1, 1, G_pad, 1),
-                     lambda b, h, j, _bps=bps: (b, h, j // _bps, 0, 0)),
-        pl.BlockSpec((1, 1, 1, G_pad, 1),
-                     lambda b, h, j, _bps=bps: (b, h, j // _bps, 0, 0)),
-        pl.BlockSpec((1, 1, 1, G_pad, D),
-                     lambda b, h, j, _bps=bps: (b, h, j // _bps, 0, 0)),
-    ]
-    out_shape = [
-        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, 1), jnp.float32),
-        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, 1), jnp.float32),
-        jax.ShapeDtypeStruct((B, Hk, n_splits, G_pad, D), jnp.float32),
-    ]
-
+    out_specs, out_shape, scratch = _partial_outputs(B, Hk, n_splits, G_pad,
+                                                     D, bps)
     m, l, acc = pl.pallas_call(
         functools.partial(_kernel, bps=bps, kind=kind, window=window,
                           softcap=softcap, scale=D ** -0.5,
-                          quantized=quantized),
+                          quantized=quantized, paged=False),
         grid=(B, Hk, n_blocks),
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
-        scratch_shapes=[
-            pltpu.VMEM((G_pad, 1), jnp.float32),
-            pltpu.VMEM((G_pad, 1), jnp.float32),
-            pltpu.VMEM((G_pad, D), jnp.float32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(*args)
+    return _finish(m, l, acc, G, q, return_partials)
 
-    m, l, acc = m[:, :, :, :G], l[:, :, :, :G], acc[:, :, :, :G]
-    if return_partials:
-        m_loc = m.max(axis=2)
-        w = jnp.exp(m - m.max(axis=2, keepdims=True))
-        return m_loc, (l * w).sum(axis=2), (acc * w).sum(axis=2)
-    out = _combine(m, l, acc, axis=2)                # (B, Hk, G, D)
-    return out.reshape(B, 1, Hk * G, D).astype(q.dtype)
+
+def _flash_decode_paged(q, k, v, kv_pos, block_tables, q_pos, *, k_scale,
+                        v_scale, kind: str, window: int, prefix_len,
+                        softcap: float, n_splits: int, interpret: bool,
+                        return_partials: bool):
+    """Paged-pool kernel launch: grid (B, Hk, T) where T is the block-table
+    width; the table is a scalar-prefetch operand and every index_map
+    dereferences it, so each program streams exactly the pool tile its
+    request granted — no gather, no per-request copy of the pool."""
+    nb, bs, Hk, D = k.shape
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    B, T = tbl.shape
+    kv_pos = jnp.asarray(kv_pos, jnp.int32)
+    qg, G, G_pad = _pack_queries(q, Hk)
+    n_splits = _pick_splits(T, n_splits)
+    bps = T // n_splits
+    quantized = k_scale is not None
+
+    kr = k.reshape(nb, bs, Hk * D)
+    vr = v.reshape(nb, bs, Hk * D)
+    qp = _broadcast_pos(q_pos, B)
+    plen = _broadcast_pos(prefix_len, B)
+
+    def pool_idx(b, h, j, t):
+        return (jnp.maximum(t[b, j], 0), 0, h)
+
+    smem = lambda: pl.BlockSpec(                                # noqa: E731
+        (1, 1), lambda b, h, j, t: (b, 0), memory_space=pltpu.SMEM)
+    in_specs = [
+        smem(), smem(),
+        pl.BlockSpec((1, 1, G_pad, D), lambda b, h, j, t: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, D), pool_idx),
+        pl.BlockSpec((1, bs, D), pool_idx),
+        pl.BlockSpec((1, bs), lambda b, h, j, t: (jnp.maximum(t[b, j], 0),
+                                                  0)),
+    ]
+    args = [qp, plen, qg, kr, vr, kv_pos]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, bs, 1), pool_idx),
+                     pl.BlockSpec((1, bs, 1), pool_idx)]
+        args += [k_scale.reshape(nb, bs, Hk), v_scale.reshape(nb, bs, Hk)]
+
+    out_specs, out_shape, scratch = _partial_outputs(B, Hk, n_splits, G_pad,
+                                                     D, bps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hk, T),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch)
+    m, l, acc = pl.pallas_call(
+        functools.partial(_kernel, bps=bps, kind=kind, window=window,
+                          softcap=softcap, scale=D ** -0.5,
+                          quantized=quantized, paged=True),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(tbl, *args)
+    return _finish(m, l, acc, G, q, return_partials)
 
 
 # ---------------------------------------------------------------------------
-# XLA fallback: identical algorithm as a scan over KV blocks (fused
-# blockwise dequant — the quantized cache is never materialized whole)
+# XLA fallback: identical semantics without Pallas.  Paged pools are
+# gathered through the table first (bit-identical to the contiguous ring
+# when T*bs == ring length — the engine's greedy-parity invariant).
 # ---------------------------------------------------------------------------
 
 def flash_decode_xla(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
                      kind: str = "causal", window: int = 0, prefix_len=None,
-                     softcap: float = 0.0, block_kv: int = 512,
-                     return_partials: bool = False, **_unused):
-    """Same signature/semantics as ``flash_decode`` without Pallas: a
-    ``lax.scan`` over block_kv-sized cache tiles with in-block dequant and
-    online softmax — O(block) temporaries instead of O(cache_len)."""
+                     softcap: float = 0.0, block_kv: int = 0,
+                     block_tables=None, return_partials: bool = False,
+                     **_unused):
+    """Same signature/semantics as ``flash_decode`` without Pallas.
+
+    ``block_kv`` <= 0 picks the measured policy: a single-pass wide form up
+    to REPRO_DECODE_WIDE_MAX (4096) slots, else a ``lax.scan`` over
+    2048-slot tiles with in-block dequant and online softmax — O(block)
+    temporaries instead of O(cache_len).  An explicit ``block_kv`` >= S
+    also selects the wide form."""
+    if block_tables is not None:
+        k, v, kv_pos, k_scale, v_scale = paged_gather(
+            k, v, kv_pos, k_scale, v_scale, block_tables)
     B, S, Hk, D = k.shape
     kv_pos = jnp.asarray(kv_pos, jnp.int32)
     if kv_pos.ndim == 1:
         kv_pos = jnp.broadcast_to(kv_pos[None], (B, S))
-    block_kv = min(block_kv, S)
+    if block_kv <= 0:
+        block_kv = S if S <= _wide_max_s() else _SCAN_BLOCK_KV
+    if block_kv >= S:
+        return _decode_wide(q, k, v, kv_pos, q_pos, k_scale=k_scale,
+                            v_scale=v_scale, kind=kind, window=window,
+                            prefix_len=prefix_len, softcap=softcap,
+                            return_partials=return_partials)
     quantized = k_scale is not None
     qg, k, v, kv_pos, k_scale, v_scale, G, _ = _pad_inputs(
         q, k, v, kv_pos, k_scale, v_scale, block_kv)
@@ -317,6 +502,45 @@ def flash_decode_xla(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
     l0 = jnp.zeros((B, Hk, G, 1), jnp.float32)
     a0 = jnp.zeros((B, Hk, G, D), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), tuple(blocks))
+    if return_partials:
+        return m, l, acc
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, 1, Hk * G, D).astype(q.dtype)
+
+
+def _decode_wide(q, k, v, kv_pos, q_pos, *, k_scale, v_scale, kind: str,
+                 window: int, prefix_len, softcap: float,
+                 return_partials: bool):
+    """Single-pass short-context form: the int8 codes are transposed to
+    (B, Hk, S, D) BEFORE dequant (1-byte traffic instead of the 4-byte
+    transpose XLA would insert after), then one masked-softmax pass — the
+    profitable shape below ``_WIDE_MAX_S``."""
+    B, S, Hk, D = k.shape
+    G = q.shape[2] // Hk
+    qg = q[:, 0].reshape(B, Hk, G, D).astype(jnp.float32)
+    kt = k.swapaxes(1, 2)                            # (B, Hk, S, D)
+    vt = v.swapaxes(1, 2)
+    if k_scale is not None:
+        kst = k_scale[..., 0].swapaxes(1, 2)[..., None]   # (B, Hk, S, 1)
+        vst = v_scale[..., 0].swapaxes(1, 2)[..., None]
+        kf = kt.astype(jnp.float32) * kst.astype(jnp.float32)
+        vf = vt.astype(jnp.float32) * vst.astype(jnp.float32)
+    else:
+        kf, vf = kt.astype(jnp.float32), vt.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, kf,
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = _broadcast_pos(q_pos, B).reshape(B, 1, 1, 1)
+    plen = _broadcast_pos(prefix_len, B).reshape(B, 1, 1, 1)
+    mask = _slot_mask(kv_pos[:, None, None, :], qp, plen,
+                      kind=kind, window=window)      # (B, 1, 1, S)
+    s = jnp.where(mask, s, _NEG)
+    m = s.max(-1, keepdims=True)                     # (B, Hk, G, 1)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = p.sum(-1, keepdims=True)
+    acc = jnp.einsum("bhgk,bhkd->bhgd", p, vf,
+                     preferred_element_type=jnp.float32)
     if return_partials:
         return m, l, acc
     out = acc / jnp.maximum(l, 1e-30)

@@ -70,10 +70,26 @@ def flash_attention(q, k, v, *, causal: bool = True, **kw):
     return ref.flash_attention_ref(q, k, v, causal=causal)
 
 
+def _pallas_min_s() -> int:
+    """Profitability floor for the Pallas kernel: below this cache length
+    the launch/grid overhead loses to one wide XLA pass, so ops.flash_decode
+    dispatches to the fallback instead (read per call like every REPRO_
+    flag)."""
+    return int(os.environ.get("REPRO_FLASH_DECODE_MIN_S", "1024"))
+
+
 def flash_decode(q, k, v, kv_pos, q_pos, **kw):
-    """One decode step over the ring cache; see
-    ``repro.kernels.flash_decode`` for signature and semantics."""
+    """One decode step over the ring or paged cache; see
+    ``repro.kernels.flash_decode`` for signature and semantics.  On TPU,
+    caches shorter than REPRO_FLASH_DECODE_MIN_S take the XLA path (kernel
+    launch not profitable); forced-interpret mode keeps the kernel so CI
+    exercises it at test sizes."""
     if use_kernels():
+        tbl = kw.get("block_tables")
+        s_logical = (tbl.shape[1] * k.shape[1] if tbl is not None
+                     else k.shape[1])
+        if on_tpu() and s_logical < _pallas_min_s():
+            return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)
         return _flash_decode(q, k, v, kv_pos, q_pos,
                              interpret=not on_tpu(), **kw)
     return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)

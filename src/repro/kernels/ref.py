@@ -38,11 +38,17 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
 
 def flash_decode_ref(q, k, v, kv_pos, q_pos, *, k_scale=None, v_scale=None,
                      kind: str = "causal", window: int = 0, prefix_len=None,
-                     softcap: float = 0.0, **_unused):
+                     softcap: float = 0.0, block_tables=None, **_unused):
     """Naive decode-step oracle: dequantize the whole cache, materialize the
     full (H, S) score matrix, f32 softmax.  q: (B, 1, H, D); k, v:
     (B, S, Hk, D) (+ (B, S, Hk, 1) absmax scales for int8 caches); kv_pos:
-    (B, S) absolute slot positions (-1 == empty); q_pos scalar or (B,)."""
+    (B, S) absolute slot positions (-1 == empty); q_pos scalar or (B,).
+    ``block_tables`` (B, T): k/v are an (n_blocks, block_size, Hk, D) paged
+    pool instead — gathered to the logical (B, T*block_size) view first."""
+    if block_tables is not None:
+        from repro.kernels.flash_decode import paged_gather
+        k, v, kv_pos, k_scale, v_scale = paged_gather(
+            k, v, kv_pos, k_scale, v_scale, block_tables)
     B, S, Hk, D = k.shape
     H = q.shape[2]
     G = H // Hk

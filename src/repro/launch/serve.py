@@ -81,24 +81,34 @@ def _to_request(r: dict):
 
 def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
                max_tokens_in_flight: int = 0, prefill_chunk: int = 0,
-               prefill_bucket: int = 0, quiet: bool = False):
+               prefill_bucket: int = 0, paged=None, block_size: int = 0,
+               pool_blocks: int = 0, quiet: bool = False):
     from repro.serve import ForecastEngine
     engine = ForecastEngine(cfg, params, num_slots=slots,
                             cache_len=cache_len,
                             max_tokens_in_flight=max_tokens_in_flight,
                             prefill_chunk=prefill_chunk,
-                            prefill_bucket=prefill_bucket)
+                            prefill_bucket=prefill_bucket,
+                            paged=paged, block_size=block_size,
+                            pool_blocks=pool_blocks)
     for r in trace:
         engine.submit(_to_request(r))
     done = engine.run()
     summ = engine.metrics.summary()
     if not quiet:
+        pool_kind = (f"paged ({engine.pool.pool_blocks} blocks x "
+                     f"{engine.pool.block_size})" if engine.paged
+                     else "contiguous lanes")
         print(f"engine: {summ['requests']} requests, "
               f"{summ['decode_tokens']} tokens in {summ['decode_steps']} "
               f"steps ({summ['tok_per_s']:.1f} tok/s aggregate, "
               f"{summ['steady_tok_per_s']:.1f} tok/s steady decode)")
         print(f"        mean TTFT {summ['mean_ttft_s'] * 1e3:.0f}ms, "
-              f"occupancy {summ['mean_occupancy']:.2f}, "
+              f"occupancy {summ['mean_occupancy']:.2f}, block util "
+              f"{summ['mean_block_utilization']:.2f} [{pool_kind}], "
+              f"peak in-flight {summ['peak_in_flight']}, "
+              f"parked {summ['parked_events']}, "
+              f"evicted {summ['evictions']}, "
               f"compiled serve_step signatures: "
               f"{engine.num_step_signatures()}")
     return done, summ, engine
@@ -183,6 +193,18 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=0)
     ap.add_argument("--prefill-bucket", type=int, default=0)
     ap.add_argument("--trace-seed", type=int, default=0)
+    # paged block-KV pool (default: auto — on for uniform-ring dense/moe)
+    ap.add_argument("--paged", dest="paged", action="store_const", const=True,
+                    default=None, help="force the paged block-KV pool")
+    ap.add_argument("--no-paged", dest="paged", action="store_const",
+                    const=False, help="force contiguous per-slot lanes")
+    ap.add_argument("--block-size", type=int, default=0,
+                    help="paged pool block size (0 = divisor of the ring "
+                         "nearest REPRO_PAGED_BLOCK, default 16)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="physical blocks in the paged pool (0 = full "
+                         "capacity slots*blocks_per_slot; less "
+                         "oversubscribes lanes against real footprints)")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -203,7 +225,9 @@ def main() -> None:
         run_engine(cfg, params, trace, slots=args.slots, cache_len=cache_len,
                    max_tokens_in_flight=args.max_tokens_in_flight,
                    prefill_chunk=args.prefill_chunk,
-                   prefill_bucket=args.prefill_bucket)
+                   prefill_bucket=args.prefill_bucket,
+                   paged=args.paged, block_size=args.block_size,
+                   pool_blocks=args.pool_blocks)
     else:
         run_fixed_batch(cfg, params, api, batch=args.batch,
                         prompt_len=args.prompt_len, gen=args.gen)

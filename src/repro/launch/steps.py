@@ -135,7 +135,11 @@ def make_serve_step(cfg: ModelConfig, *, force_window: int = 0,
         positions, ``-1`` marking inactive lanes.  Inactive lanes are fully
         masked in attention, their cache lanes are frozen (SSM states
         included), and their token passes through unchanged — batch
-        composition changes step to step without re-jit.
+        composition changes step to step without re-jit.  With a paged pool
+        (``block_tbl``/``ring_len`` in the batch) the attention cache is one
+        shared block pool: inactive-lane writes are already dropped at the
+        scatter (out-of-bounds index, mode="drop"), so the freeze select is
+        skipped — it has no batch axis to select over.
 
     ``sampling=True`` additionally reads per-slot ``temperature``/``top_k``/
     ``top_p`` ((B,) arrays), base PRNG keys ``key`` ((B, 2) uint32) and
@@ -159,11 +163,12 @@ def make_serve_step(cfg: ModelConfig, *, force_window: int = 0,
         else:
             next_token = jnp.argmax(lg, axis=-1).astype(jnp.int32)[:, None]
         if pos.ndim == 1:
-            from repro.serve.cache_pool import (cache_batch_axes,
-                                                freeze_inactive)
             active = pos >= 0
-            new_cache = freeze_inactive(cache, new_cache, active,
-                                        cache_batch_axes(api, cfg))
+            if "block_tbl" not in batch:
+                from repro.serve.cache_pool import (cache_batch_axes,
+                                                    freeze_inactive)
+                new_cache = freeze_inactive(cache, new_cache, active,
+                                            cache_batch_axes(api, cfg))
             next_token = jnp.where(active[:, None], next_token,
                                    batch["token"])
         return next_token, new_cache

@@ -288,14 +288,16 @@ def _dequant_kv(q, scale, dtype):
 
 
 def _decode_block_kv() -> int:
-    """KV block streamed per decode step through the fused path (the Pallas
-    kernel additionally splits blocks across KV splits).  Read per call so
-    REPRO_DECODE_BLOCK_KV behaves like every other REPRO_ flag."""
-    return int(os.environ.get("REPRO_DECODE_BLOCK_KV", "1024"))
+    """KV block streamed per decode step through the fused path (0 == derive
+    from the cache length; the Pallas kernel additionally splits blocks
+    across KV splits).  Read per call so REPRO_DECODE_BLOCK_KV behaves like
+    every other REPRO_ flag."""
+    return int(os.environ.get("REPRO_DECODE_BLOCK_KV", "0"))
 
 
 def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
-                kind: str = "causal", prefix_len=None):
+                kind: str = "causal", prefix_len=None, block_tbl=None,
+                ring_len=None):
     """One decode step.
 
     x_t: (B, 1, d_in); ``pos`` scalar int32 (synchronous batch decode) OR
@@ -305,26 +307,57 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
     cache: ring buffer from ``init_attn_cache`` (cache_len == window for SWA
     layers, == max_seq for global layers).  Returns (y_t, new_cache).
 
+    Paged mode (``block_tbl`` (B, T) + ``ring_len``): the cache leaves are a
+    shared block pool — k/v (n_blocks, block_size, Hk, dh), kv_pos
+    (n_blocks, block_size) — and each row's ring slot ``pos % ring_len``
+    resolves through its block-table row to a physical pool slot.  Writes
+    scatter with ``mode="drop"``: inactive rows and ungranted blocks index
+    out of bounds and write nothing, so no freeze pass over the pool is
+    needed (allocator invariant: live requests never share a block).
+
     Attention over the cache goes through the fused flash-decode path
     (``repro.kernels.ops.flash_decode``): Pallas kernel on TPU /
-    REPRO_FORCE_KERNELS=1, blockwise-scan XLA fallback elsewhere — the int8
-    cache is dequantized tile-by-tile inside the streamed pass, never whole.
-    Under an active mesh with a seq-sharded cache (REPRO_CACHE_SHARD=seq)
-    the step runs per-shard with a psum-style combine over ``model``
-    (``repro.dist.decode``).  REPRO_FLASH_DECODE=0 restores the legacy
-    dequantize-then-sdpa step.
+    REPRO_FORCE_KERNELS=1 (block tables ride a scalar-prefetch operand),
+    wide/blockwise XLA fallback elsewhere — the kernel and the scan
+    fallback dequantize the int8 cache tile-by-tile inside the streamed
+    pass (the fallback's short-cache wide form, <= REPRO_DECODE_WIDE_MAX
+    slots, trades one O(S) dequant copy for measured speed).  Under an
+    active
+    mesh with a seq-sharded cache (REPRO_CACHE_SHARD=seq) the step runs
+    per-shard with a psum-style combine over ``model``
+    (``repro.dist.decode``; paged pools shard the block axis).
+    REPRO_FLASH_DECODE=0 restores the legacy dequantize-then-sdpa step.
     """
     B = x_t.shape[0]
-    cache_len = cache["k"].shape[1]
+    paged = block_tbl is not None
     int8 = "k_scale" in cache
     pos = jnp.asarray(pos, jnp.int32)
     ragged = pos.ndim == 1
+    if paged and not ragged:
+        raise ValueError("paged decode requires per-row (B,) positions")
+    cache_len = None if paged else cache["k"].shape[1]
     pos_b = pos[:, None] if ragged else jnp.full((B, 1), pos, jnp.int32)
     q, k_t, v_t = _project_qkv(
         params, cfg, x_t, None,
         positions=pos_b, kv_positions=pos_b, use_rope=True)
 
-    if ragged:
+    if paged:
+        n_blocks, bs = cache["k"].shape[:2]
+        active = pos >= 0
+        rl = jnp.asarray(ring_len, jnp.int32)
+        slot = jnp.mod(jnp.maximum(pos, 0), rl)             # (B,) ring slot
+        pb = block_tbl[jnp.arange(B), slot // bs]           # physical block
+        off = slot % bs
+        # out-of-bounds index == dropped write (inactive / ungranted rows)
+        widx = jnp.where(active & (pb >= 0), pb, n_blocks)
+
+        def upd(buf, val):
+            return buf.at[widx, off].set(val[:, 0].astype(buf.dtype),
+                                         mode="drop")
+
+        def upd_pos(buf):
+            return buf.at[widx, off].set(pos, mode="drop")
+    elif ragged:
         # per-row ring slot: every row writes its own slot; inactive rows
         # (pos < 0) keep the old slot contents and stay fully masked below
         active = pos >= 0
@@ -373,7 +406,10 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
                   kind=kind, window=window, prefix_len=prefix_len,
                   softcap=cfg.attn_logit_softcap,
                   block_kv=_decode_block_kv())  # kernels clamp to cache_len
-        mesh = seq_shard_mesh(cache_len)
+        if paged:
+            kw["block_tables"] = block_tbl
+        # sharded layout: slot axis for rings, block axis for paged pools
+        mesh = seq_shard_mesh(n_blocks if paged else cache_len)
         if mesh is not None:
             o = sharded_flash_decode(q, new_cache["k"], new_cache["v"],
                                      pos_new, pos, mesh, **kw)
@@ -383,15 +419,20 @@ def attn_decode(params, cfg, x_t, cache, pos, *, window: int = 0,
     else:
         # legacy path: full-cache dequant + naive sdpa (A/B baseline only;
         # the blockwise scales-aware sdpa is reachable via block_kv > 0)
+        k_leg, v_leg, pos_leg = new_cache["k"], new_cache["v"], pos_new
+        ks_leg = new_cache.get("k_scale")
+        vs_leg = new_cache.get("v_scale")
+        if paged:
+            from repro.kernels.flash_decode import paged_gather
+            k_leg, v_leg, pos_leg, ks_leg, vs_leg = paged_gather(
+                k_leg, v_leg, pos_leg, ks_leg, vs_leg, block_tbl)
         if int8:
-            k_full = _dequant_kv(new_cache["k"], new_cache["k_scale"],
-                                 q.dtype)
-            v_full = _dequant_kv(new_cache["v"], new_cache["v_scale"],
-                                 q.dtype)
+            k_full = _dequant_kv(k_leg, ks_leg, q.dtype)
+            v_full = _dequant_kv(v_leg, vs_leg, q.dtype)
         else:
-            k_full, v_full = new_cache["k"], new_cache["v"]
+            k_full, v_full = k_leg, v_leg
         o = sdpa(q, k_full, v_full,
-                 q_pos=pos_b, kv_pos=pos_new,
+                 q_pos=pos_b, kv_pos=pos_leg,
                  kind=kind, window=window, prefix_len=prefix_len,
                  softcap=cfg.attn_logit_softcap)
     y = dense(params["wo"], o.reshape(B, 1, -1))

@@ -86,7 +86,7 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
-                force_window: int = 0):
+                force_window: int = 0, block_tbl=None, ring_len=None):
     x = embed_tokens(params, cfg, token)
     w = force_window or cfg.sliding_window
 
@@ -94,7 +94,8 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
         lp, c = lp_cache
         a, c2 = attn_decode(lp["attn"], cfg,
                             rmsnorm(lp["attn_norm"], h, cfg.norm_eps),
-                            c, pos, window=w)
+                            c, pos, window=w, block_tbl=block_tbl,
+                            ring_len=ring_len)
         h = h + a
         m, _ = moe_block(lp["moe"], cfg,
                          rmsnorm(lp["moe_norm"], h, cfg.norm_eps))

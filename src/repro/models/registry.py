@@ -43,7 +43,9 @@ def _dense_api():
     def decode_step(params, cfg, cache, batch, *, force_window=0):
         return transformer.decode_step(params, cfg, cache, batch["token"],
                                        batch["pos"],
-                                       force_window=force_window)
+                                       force_window=force_window,
+                                       block_tbl=batch.get("block_tbl"),
+                                       ring_len=batch.get("ring_len"))
 
     return SimpleNamespace(init=transformer.init, loss=loss, prefill=prefill,
                            decode_step=decode_step,
@@ -65,7 +67,9 @@ def _moe_api():
     def decode_step(params, cfg, cache, batch, *, force_window=0):
         return moe_transformer.decode_step(params, cfg, cache,
                                            batch["token"], batch["pos"],
-                                           force_window=force_window)
+                                           force_window=force_window,
+                                           block_tbl=batch.get("block_tbl"),
+                                           ring_len=batch.get("ring_len"))
 
     return SimpleNamespace(init=moe_transformer.init, loss=loss,
                            prefill=prefill, decode_step=decode_step,

@@ -104,12 +104,13 @@ def _block(p, cfg: ModelConfig, x, *, positions, window, kind="causal",
 
 
 def _block_decode(p, cfg: ModelConfig, x_t, cache, pos, *, window,
-                  prefix_len=None):
+                  prefix_len=None, block_tbl=None, ring_len=None):
     gemma = cfg.post_block_norm
     h, cache = attn_decode(p["attn"], cfg,
                            rmsnorm(p["attn_norm"], x_t, cfg.norm_eps,
                                    gemma_style=gemma),
-                           cache, pos, window=window, prefix_len=prefix_len)
+                           cache, pos, window=window, prefix_len=prefix_len,
+                           block_tbl=block_tbl, ring_len=ring_len)
     if gemma:
         h = rmsnorm(p["post_attn_norm"], h, cfg.norm_eps, gemma_style=True)
     x_t = x_t + h
@@ -213,12 +214,21 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
-                force_window: int = 0, prefix_len=None):
-    """token (B,1) int32, pos scalar -> (logits (B,1,V), new cache)."""
+                force_window: int = 0, prefix_len=None, block_tbl=None,
+                ring_len=None):
+    """token (B,1) int32, pos scalar -> (logits (B,1,V), new cache).
+
+    ``block_tbl``/``ring_len`` select the paged-pool cache layout (uniform
+    rings only — every layer shares one block geometry and one table; see
+    repro.serve.cache_pool.PagedCachePool)."""
     x = embed_tokens(params, cfg, token)
     w = force_window or cfg.sliding_window
 
     if cfg.local_global_alternating:
+        if block_tbl is not None:
+            raise ValueError("paged KV pools require uniform ring lengths; "
+                             "local/global alternating layers keep "
+                             "contiguous lanes")
         def body(h, lp_cache):
             lp, c = lp_cache
             h, c_l = _block_decode(lp["local"], cfg, h, c["local"], pos,
@@ -232,7 +242,8 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos, *,
         def body(h, lp_cache):
             lp, c = lp_cache
             h, c2 = _block_decode(lp, cfg, h, c, pos, window=w,
-                                  prefix_len=prefix_len)
+                                  prefix_len=prefix_len,
+                                  block_tbl=block_tbl, ring_len=ring_len)
             return h, c2
         x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
 

@@ -1,9 +1,12 @@
 """repro.serve — forecast-serving: sampling + the continuous-batching
 engine (engine / scheduler / cache_pool / request / metrics)."""
 
+from repro.serve.cache_pool import (BlockAllocator, CachePool,
+                                    PagedCachePool)
 from repro.serve.engine import ForecastEngine
 from repro.serve.request import FinishedRequest, Request, SamplingParams
 from repro.serve.scheduler import FIFOScheduler, SchedulerConfig
 
 __all__ = ["ForecastEngine", "Request", "SamplingParams", "FinishedRequest",
-           "FIFOScheduler", "SchedulerConfig"]
+           "FIFOScheduler", "SchedulerConfig", "CachePool", "PagedCachePool",
+           "BlockAllocator"]

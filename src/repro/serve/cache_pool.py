@@ -1,12 +1,26 @@
-"""Fixed pool of per-slot ring KV / SSM cache lanes.
+"""Cache pools for the serving engine: contiguous per-slot lanes and the
+paged block-KV pool.
 
-One donated cache pytree is preallocated for ``num_slots`` lanes
-(``api.init_cache(cfg, num_slots, cache_len)``); a request is "placed" by
-writing its batch-1 prefill cache into lane ``slot`` with a traced
-``dynamic_update_slice`` — slot assignment therefore never re-jits, and the
-pool works unchanged for bf16 and int8 (``REPRO_KV_INT8``) caches and for
-``REPRO_CACHE_SHARD=seq`` layouts (the slot axis of the ring cache is
-untouched; only the batch axis is indexed).
+``CachePool`` preallocates ``num_slots`` full-length cache lanes in one
+donated pytree — a request is "placed" by writing its batch-1 prefill cache
+into lane ``slot`` with a traced ``dynamic_update_slice``.  It works for
+every servable family (attention rings AND SSM/hybrid state, bf16 and int8,
+``REPRO_CACHE_SHARD=seq`` layouts) because it never looks inside the leaves:
+``cache_batch_axes`` finds each leaf's batch axis structurally.
+
+``PagedCachePool`` is the HBM-efficient layout for uniform attention-ring
+families (dense/moe without local/global alternation): ONE donated block
+pool of shape ``(L, n_blocks, block_size, Hk, dh)`` plus a host-side block
+table ``(num_slots, blocks_per_slot)`` mapping each lane's logical ring
+blocks to physical pool blocks.  A lane only holds the blocks its tokens
+actually occupy — short requests stop reserving a full ``cache_len`` lane,
+so at fixed pool bytes strictly more requests fit in flight.  Blocks are
+granted on demand (`grant`) as decode crosses block boundaries and freed
+wholesale at retirement; freshly granted blocks get their ``kv_pos``
+invalidated on device (`reset_blocks`) so a previous owner's stale
+positions can never leak through the ring-validity mask.  SSM/hybrid
+families keep dense lanes behind the same engine-facing surface
+(acquire/release/insert + block accounting).
 
 Cache pytrees stack layers OUTSIDE the batch axis (``(L, B, S, Hk, dh)``
 for attention rings, ``(nG, nM, B, ...)`` for SSM states), so the batch
@@ -18,11 +32,14 @@ per-family layouts.
 
 from __future__ import annotations
 
-import functools
-from typing import List
+import os
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+PAGED_FAMILIES = ("dense", "moe")
 
 
 def cache_batch_axes(api, cfg, *, probe_len: int = 8):
@@ -61,36 +78,17 @@ def freeze_inactive(old_cache, new_cache, active, axes):
         old_cache, new_cache, axes)
 
 
-class CachePool:
-    """``num_slots`` cache lanes carved out of one preallocated cache.
+class _LanePool:
+    """Shared lane (slot) free-list: acquire/release bookkeeping common to
+    both pool layouts.  Slot lifecycle is owned by the engine; the pools
+    only track the free list."""
 
-    Slot lifecycle is owned by the engine (this class only tracks the free
-    list); ``insert`` is the single compiled entry point — slot index and
-    request cache are traced, so admissions at any slot share one
-    signature.
-    """
-
-    def __init__(self, api, cfg, num_slots: int, cache_len: int, *,
-                 force_window: int = 0, dtype=None):
+    def __init__(self, num_slots: int, cache_len: int):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.num_slots = num_slots
         self.cache_len = cache_len
-        dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
-        self.cache = api.init_cache(cfg, num_slots, cache_len,
-                                    force_window=force_window, dtype=dtype)
-        self.axes = cache_batch_axes(api, cfg)
         self._free: List[int] = list(range(num_slots - 1, -1, -1))
-
-        def _insert(pool, req_cache, slot):
-            return jax.tree.map(
-                lambda p, r, ax: jax.lax.dynamic_update_slice_in_dim(
-                    p, r.astype(p.dtype), slot, axis=ax),
-                pool, req_cache, self.axes)
-
-        self._insert = jax.jit(_insert, donate_argnums=(0,))
-
-    # -- slot management ----------------------------------------------------
 
     @property
     def free_slots(self) -> int:
@@ -106,6 +104,43 @@ class CachePool:
             raise ValueError(f"slot {slot} double-freed")
         self._free.append(slot)
 
+
+class CachePool(_LanePool):
+    """``num_slots`` cache lanes carved out of one preallocated cache.
+
+    ``insert`` is the single compiled entry point — slot index and
+    request cache are traced, so admissions at any slot share one
+    signature.
+    """
+
+    def __init__(self, api, cfg, num_slots: int, cache_len: int, *,
+                 force_window: int = 0, dtype=None):
+        super().__init__(num_slots, cache_len)
+        dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
+        self.cache = api.init_cache(cfg, num_slots, cache_len,
+                                    force_window=force_window, dtype=dtype)
+        self.axes = cache_batch_axes(api, cfg)
+
+        def _insert(pool, req_cache, slot):
+            return jax.tree.map(
+                lambda p, r, ax: jax.lax.dynamic_update_slice_in_dim(
+                    p, r.astype(p.dtype), slot, axis=ax),
+                pool, req_cache, self.axes)
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+
+    # -- block accounting (lane granularity) ---------------------------------
+
+    @property
+    def pool_blocks(self) -> int:
+        """Block accounting at lane granularity: one lane == one block (the
+        paged pool refines this; metrics report both layouts uniformly)."""
+        return self.num_slots
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_slots - len(self._free)
+
     # -- data path ----------------------------------------------------------
 
     def insert(self, req_cache, slot: int) -> None:
@@ -113,3 +148,213 @@ class CachePool:
         compiled signature for every slot/admission)."""
         self.cache = self._insert(self.cache, req_cache,
                                   jnp.asarray(slot, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Paged block pool
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """LIFO free-list allocator over ``n_blocks`` physical pool blocks.
+
+    Invariant (the hypothesis property in tests/test_paged_pool.py): the
+    free list and the allocated set always partition ``range(n_blocks)`` —
+    no block is ever in two hands, so two live requests can never scatter
+    into the same pool slot."""
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError("n_blocks must be >= 1")
+        self.n_blocks = n_blocks
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Pop ``n`` blocks; raises RuntimeError (allocating nothing) when
+        fewer than ``n`` are free — the caller parks or evicts."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"block pool exhausted: want {n}, free {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        blocks = list(blocks)
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate blocks in one free: {blocks}")
+        for b in blocks:                       # validate before mutating
+            if b not in self._used:
+                raise ValueError(f"block {b} double-freed (or never "
+                                 f"allocated)")
+        for b in blocks:
+            self._used.discard(b)
+            self._free.append(b)
+
+
+def auto_block_size(ring_len: int, target: int = 0) -> int:
+    """Divisor of ``ring_len`` nearest the target block size (ties -> the
+    larger).  Divisibility keeps the logical gather view exactly the ring —
+    the bit-identical-greedy invariant — and makes the free-list/table
+    partition exact (no half-used tail blocks).  REPRO_PAGED_BLOCK overrides
+    the target (on real TPUs pick a 128-multiple)."""
+    target = target or int(os.environ.get("REPRO_PAGED_BLOCK", "16"))
+    divs = [d for d in range(1, ring_len + 1) if ring_len % d == 0]
+    return min(divs, key=lambda d: (abs(d - target), -d))
+
+
+class PagedCachePool(_LanePool):
+    """Paged block-KV pool: one shared block pool + per-lane block tables.
+
+    Engine-facing surface mirrors ``CachePool`` (free_slots / acquire /
+    release / insert / cache) plus the paged extras: ``table`` (the host
+    block table the engine ships into each serve step), ``grant`` /
+    ``reset_blocks`` for on-demand block growth during decode, and
+    block-level accounting for admission control and metrics.
+
+    Geometry: the logical per-request ring is ``ring_len = min(cache_len,
+    window)`` slots, carved into ``blocks_per_slot`` blocks of
+    ``block_size`` (which must divide ``ring_len`` — ``auto_block_size``
+    picks such a divisor).  The pool holds ``pool_blocks`` physical blocks
+    (default: full capacity, ``num_slots * blocks_per_slot``; pass less to
+    oversubscribe lanes against actual token footprints — the whole point).
+    """
+
+    def __init__(self, cfg, num_slots: int, cache_len: int, *,
+                 block_size: int = 0, pool_blocks: int = 0,
+                 force_window: int = 0, dtype=None):
+        super().__init__(num_slots, cache_len)
+        if cfg.family not in PAGED_FAMILIES or cfg.local_global_alternating:
+            raise ValueError(
+                f"paged KV pools need one uniform ring geometry per layer "
+                f"(families {PAGED_FAMILIES}, no local/global alternation); "
+                f"got {cfg.family!r}")
+        from repro.models.layers.attention import init_attn_cache
+        w = force_window or cfg.sliding_window
+        ring_len = min(cache_len, w) if w > 0 else cache_len
+        block_size = block_size or auto_block_size(ring_len)
+        if ring_len % block_size:
+            raise ValueError(f"block_size {block_size} must divide the ring "
+                             f"length {ring_len}")
+        self.ring_len = ring_len
+        self.block_size = block_size
+        self.blocks_per_slot = ring_len // block_size
+        n_blocks = pool_blocks or num_slots * self.blocks_per_slot
+        dtype = jnp.dtype(cfg.compute_dtype) if dtype is None else dtype
+        dh = cfg.resolved_head_dim()
+        self.cache = jax.vmap(lambda _: init_attn_cache(
+            n_blocks, block_size, cfg.num_kv_heads, dh, dtype))(
+            jnp.arange(cfg.num_layers))
+        self.allocator = BlockAllocator(n_blocks)
+        self.table = np.full((num_slots, self.blocks_per_slot), -1, np.int32)
+
+        T, bs = self.blocks_per_slot, self.block_size
+
+        def _insert(pool, req_cache, row):
+            # req_cache leaves: (L, 1, ring_len, ...) -> (L, T, bs, ...)
+            # scattered at the physical ids in ``row`` (-1 == ungranted ->
+            # out-of-bounds index, dropped)
+            idx = jnp.where(row >= 0, row, n_blocks)
+
+            def scatter(p, r):
+                blocks = r[:, 0].reshape((r.shape[0], T, bs) + r.shape[3:])
+                return p.at[:, idx].set(blocks.astype(p.dtype), mode="drop")
+
+            return jax.tree.map(scatter, pool, req_cache)
+
+        self._insert = jax.jit(_insert, donate_argnums=(0,))
+
+        def _reset(kv_pos, idx):
+            # (L, n_blocks, bs) -> granted blocks' positions invalidated
+            return kv_pos.at[:, idx].set(-1, mode="drop")
+
+        self._reset = jax.jit(_reset, donate_argnums=(0,))
+
+    # -- slot management ----------------------------------------------------
+
+    @property
+    def pool_blocks(self) -> int:
+        return self.allocator.n_blocks
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.allocator.used_blocks
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.free_blocks
+
+    def blocks_for(self, extent: int) -> int:
+        """Blocks covering ring slots [0, extent) — admission cost of a
+        prefill whose occupied ring extent is ``extent`` tokens."""
+        return -(-min(extent, self.ring_len) // self.block_size)
+
+    def release(self, slot: int) -> None:
+        """Retire a lane: every block in its table row returns to the free
+        list (stale contents are masked on next grant via reset_blocks)."""
+        super().release(slot)                  # validates double-free first
+        row = self.table[slot]
+        self.allocator.free([int(b) for b in row[row >= 0]])
+        self.table[slot] = -1
+
+    # -- block lifecycle -----------------------------------------------------
+
+    def grant_prefix(self, slot: int, n: int) -> List[int]:
+        """Admission grant: physical blocks for logical blocks [0, n) of
+        lane ``slot`` (the prefill extent).  Raises RuntimeError without
+        side effects when the pool can't cover it."""
+        ids = self.allocator.alloc(n)
+        self.table[slot, :n] = ids
+        return ids
+
+    def grant(self, slot: int, logical_block: int) -> int:
+        """Decode-time grant of one block (the write position crossed into
+        an ungranted logical block).  Raises RuntimeError when exhausted —
+        the engine parks the request."""
+        if self.table[slot, logical_block] >= 0:
+            raise ValueError(f"slot {slot} logical block {logical_block} "
+                             f"already granted")
+        b = self.allocator.alloc(1)[0]
+        self.table[slot, logical_block] = b
+        return b
+
+    def reset_blocks(self, blocks: Sequence[int]) -> None:
+        """Invalidate kv_pos of freshly granted blocks on device (stale
+        positions from a previous owner must not pass the validity mask).
+        Padded to num_slots ids per call — at most one grant per lane per
+        step — so every reset shares one compiled signature."""
+        if not blocks:
+            return
+        idx = np.full((self.num_slots,), self.allocator.n_blocks, np.int32)
+        idx[:len(blocks)] = blocks
+        self.cache["kv_pos"] = self._reset(self.cache["kv_pos"],
+                                           jnp.asarray(idx))
+
+    # -- data path ----------------------------------------------------------
+
+    def insert(self, req_cache, slot: int) -> None:
+        """Scatter a batch-1 prefill ring into this lane's granted blocks
+        (traced — one compiled signature for every slot/admission)."""
+        self.cache = self._insert(self.cache, req_cache,
+                                  jnp.asarray(self.table[slot]))
+
+    # -- invariants (tests) --------------------------------------------------
+
+    def assert_partition(self) -> None:
+        """Free list + all table rows partition the physical pool."""
+        free = set(self.allocator._free)
+        held = [int(b) for b in self.table.ravel() if b >= 0]
+        assert len(held) == len(set(held)), "block granted to two lanes"
+        assert free.isdisjoint(held), "block both free and granted"
+        assert free | set(held) == set(range(self.allocator.n_blocks)), \
+            "block leaked (neither free nor granted)"
+        assert set(held) == self.allocator._used, \
+            "allocator used-set out of sync with the table"

@@ -10,11 +10,23 @@ every step; the compiled step signature never does (asserted by
 ``num_step_signatures``), which is what lets one jit serve an arbitrary
 request trace.
 
+Cache layout: uniform attention-ring families (dense/moe without
+local/global alternation) default to the **paged block pool** — one shared
+block pool plus per-lane block tables, so a lane only pins the blocks its
+tokens occupy and short requests stop reserving full ``cache_len`` lanes
+(REPRO_PAGED_KV=0 or ``paged=False`` restores contiguous lanes; SSM/hybrid
+state lanes are always dense).  Paged decode grants blocks on demand as a
+request's write position crosses a block boundary; on pool exhaustion the
+request **parks** (its lane masked inactive, its blocks and neighbours
+untouched) until frees arrive, and if *every* resident is parked the
+youngest is evicted back onto the queue — prompt + generated tokens — to
+recompute later, so the engine never livelocks while holding blocks hostage.
+
 Decode composes with the whole serving stack: fused flash-decode kernels
-(``REPRO_FLASH_DECODE``), int8 ring caches (``REPRO_KV_INT8``), and
-seq-sharded cache layouts (``REPRO_CACHE_SHARD=seq`` under an active mesh —
-the ragged step runs per-shard with the same pmax/psum combine, since lane
-masking rides on per-slot positions which shard with the cache).
+(``REPRO_FLASH_DECODE``; block tables ride a scalar-prefetch operand), int8
+caches (``REPRO_KV_INT8``), and seq-sharded cache layouts
+(``REPRO_CACHE_SHARD=seq`` under an active mesh — rings shard the slot
+axis, paged pools the block axis, with the same pmax/psum combine).
 
     engine = ForecastEngine(cfg, params, num_slots=8, cache_len=256)
     engine.submit(Request(id="r0", prompt=toks, max_new_tokens=32))
@@ -23,6 +35,7 @@ masking rides on per-slot positions which shard with the cache).
 
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List, Optional
 
@@ -33,7 +46,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.launch.steps import make_serve_step
 from repro.models.registry import get_model
-from repro.serve.cache_pool import CachePool
+from repro.serve.cache_pool import (PAGED_FAMILIES, CachePool,
+                                    PagedCachePool)
 from repro.serve.metrics import EngineMetrics
 from repro.serve.request import FinishedRequest, GenState, Request
 from repro.serve.sampling import sample_vec
@@ -55,7 +69,8 @@ class ForecastEngine:
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int = 4,
                  cache_len: int = 256, max_tokens_in_flight: int = 0,
                  prefill_chunk: int = 0, prefill_bucket: int = 0,
-                 force_window: int = 0):
+                 force_window: int = 0, paged: Optional[bool] = None,
+                 block_size: int = 0, pool_blocks: int = 0):
         if cfg.family not in _SERVABLE:
             raise ValueError(f"family {cfg.family!r} not servable by the "
                              f"engine (supported: {_SERVABLE})")
@@ -69,16 +84,37 @@ class ForecastEngine:
         self.api = get_model(cfg)
         self.prefill_bucket = prefill_bucket
         self.force_window = force_window
-        self.pool = CachePool(self.api, cfg, num_slots, cache_len,
-                              force_window=force_window)
+        if paged is None:                     # default on where eligible
+            paged = (os.environ.get("REPRO_PAGED_KV", "1") != "0"
+                     and cfg.family in PAGED_FAMILIES
+                     and not cfg.local_global_alternating)
+        self.paged = paged
+        if paged:
+            self.pool = PagedCachePool(cfg, num_slots, cache_len,
+                                       block_size=block_size,
+                                       pool_blocks=pool_blocks,
+                                       force_window=force_window)
+        else:
+            if block_size or pool_blocks:
+                raise ValueError("block_size/pool_blocks require paged=True")
+            self.pool = CachePool(self.api, cfg, num_slots, cache_len,
+                                  force_window=force_window)
         self.scheduler = FIFOScheduler(SchedulerConfig(
             max_tokens_in_flight=max_tokens_in_flight,
             prefill_chunk=prefill_chunk))
-        self.metrics = EngineMetrics(num_slots)
+        self.metrics = EngineMetrics(num_slots,
+                                     pool_blocks=self.pool.pool_blocks)
         self.step_count = 0
         self.finished: Dict[str, FinishedRequest] = {}
         self.slots: List[Optional[GenState]] = [None] * num_slots
         self._submit_time: Dict[str, float] = {}
+        # global-attention rings must hold the whole sequence: dense/moe
+        # without a (forced) sliding window, and hybrid, whose attention
+        # layers are always global.  Windowed archs wrap by design; pure
+        # SSM state is O(1).
+        self._ring_is_global = (
+            cfg.family in _BUCKETABLE and cfg.sliding_window == 0
+            and not force_window) or cfg.family == "hybrid"
 
         # fixed-shape per-slot batch arrays — the ONLY thing the compiled
         # step sees; host-side admission/eviction just rewrites rows
@@ -102,8 +138,8 @@ class ForecastEngine:
 
         self._prefill_fn = jax.jit(_prefill)
 
-        def _first(logits, key, temp, top_k, top_p):
-            keys = jax.random.fold_in(key, 0)[None]
+        def _first(logits, key, temp, top_k, top_p, t):
+            keys = jax.random.fold_in(key, t)[None]
             return sample_vec(keys, logits[:, -1, :], temperature=temp[None],
                               top_k=top_k[None], top_p=top_p[None])[0]
 
@@ -119,22 +155,19 @@ class ForecastEngine:
                 f"request {request.id}: total tokens "
                 f"({request.total_tokens}) exceed max_tokens_in_flight "
                 f"({budget}) — it could never be admitted")
-        # global-attention rings must hold the whole sequence: dense/moe
-        # without a (forced) sliding window, and hybrid, whose attention
-        # layers are always global.  Windowed archs wrap by design; pure
-        # SSM state is O(1).
-        ring_is_global = (
-            self.cfg.family in _BUCKETABLE and self.cfg.sliding_window == 0
-            and not self.force_window) or self.cfg.family == "hybrid"
-        if ring_is_global:
-            footprint = max(
-                request.total_tokens,
-                bucket_len(request.prompt_len, self.prefill_bucket))
-            if footprint > self.pool.cache_len:
+        footprint = max(request.total_tokens,
+                        bucket_len(request.prompt_len, self.prefill_bucket))
+        if self._ring_is_global and footprint > self.pool.cache_len:
+            raise ValueError(
+                f"request {request.id}: prompt + horizon (bucketed: "
+                f"{footprint}) exceeds cache_len ({self.pool.cache_len})")
+        if self.paged:
+            need = self.pool.blocks_for(footprint)
+            if need > self.pool.pool_blocks:
+                # even alone it would park forever: reject at submit
                 raise ValueError(
-                    f"request {request.id}: prompt + horizon (bucketed: "
-                    f"{footprint}) exceeds cache_len "
-                    f"({self.pool.cache_len})")
+                    f"request {request.id}: needs {need} blocks, pool has "
+                    f"{self.pool.pool_blocks}")
         self._submit_time[request.id] = time.perf_counter()
         self.scheduler.submit(request)
 
@@ -153,12 +186,19 @@ class ForecastEngine:
         return self._step_fn._cache_size()
 
     def step(self) -> None:
-        """One engine tick: admit what fits, then one batched decode."""
+        """One engine tick: admit what fits, grow/park paged lanes, then
+        one batched decode."""
+        free_blocks = self.pool.free_blocks if self.paged else -1
+        blocks_needed = self._admit_blocks if self.paged else None
         for req in self.scheduler.admit(
                 now_step=self.step_count,
                 free_slots=self.pool.free_slots,
-                tokens_in_flight=self.tokens_in_flight):
+                tokens_in_flight=self.tokens_in_flight,
+                free_blocks=free_blocks,
+                blocks_needed=blocks_needed):
             self._admit(req)
+        if self.paged:
+            self._grant_pass()
         self._decode()
         self.step_count += 1
 
@@ -173,31 +213,55 @@ class ForecastEngine:
 
     # -- internals -----------------------------------------------------------
 
+    def _bucketed_len(self, req: Request) -> int:
+        P = req.prompt_len
+        Pb = bucket_len(P, self.prefill_bucket)
+        if req.resume and self._ring_is_global and Pb > self.pool.cache_len:
+            return P            # resumed prompts skip bucketing on overflow
+        return Pb
+
+    def _admit_blocks(self, req: Request) -> int:
+        """Paged admission price: blocks covering the prefill ring extent
+        (decode growth is granted on demand)."""
+        return self.pool.blocks_for(self._bucketed_len(req))
+
     def _admit(self, req: Request) -> None:
         slot = self.pool.acquire()
         P = req.prompt_len
-        Pb = bucket_len(P, self.prefill_bucket)
+        Pb = self._bucketed_len(req)
+        if self.paged:
+            self.pool.grant_prefix(slot, self.pool.blocks_for(Pb))
         toks = np.zeros((1, Pb), np.int32)
         toks[0, :P] = req.prompt
+        # true_len rides along whenever bucketing is on (one bucketed prefill
+        # signature even for exact-fit prompts); a resume that skipped
+        # bucketing prefills at its exact length
         true_len = (jnp.asarray([P], jnp.int32)
-                    if self.prefill_bucket else None)
+                    if self.prefill_bucket and (Pb != P or not req.resume)
+                    else None)
         cache1, logits = self._prefill_fn(self.params, jnp.asarray(toks),
                                           true_len)
         self.pool.insert(cache1, slot)
 
+        res = req.resume or {}
+        prior: List[int] = list(res.get("generated", []))
         sp = req.sampling
         base_key = np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)
+        # sample counter continues across eviction/recompute: token i of the
+        # ORIGINAL request is always drawn from fold_in(key, i)
         tok0 = int(self._first_fn(
             logits, jnp.asarray(base_key),
             jnp.asarray(sp.temperature, jnp.float32),
             jnp.asarray(sp.top_k, jnp.int32),
-            jnp.asarray(sp.top_p, jnp.float32)))
+            jnp.asarray(sp.top_p, jnp.float32),
+            jnp.asarray(len(prior), jnp.int32)))
 
         now = time.perf_counter()
         st = GenState(request=req, slot=slot, pos=P, last_token=tok0,
+                      generated=prior,
                       admitted_step=self.step_count, admitted_time=now)
         self.metrics.record_admit(P)
-        done = req.max_new_tokens == 1 or tok0 == req.eos_id
+        done = st.remaining == 1 or tok0 == req.eos_id
         st.emit(tok0, is_last=done, now=now)
         if done:
             self._retire(st, "eos" if tok0 == req.eos_id else "length")
@@ -209,10 +273,87 @@ class ForecastEngine:
         self._topk[slot] = sp.top_k
         self._topp[slot] = sp.top_p
         self._key[slot] = base_key
-        self._t[slot] = 1                     # token 0 came from prefill
+        self._t[slot] = len(prior) + 1        # last token came from prefill
+
+    # -- paged block lifecycle ----------------------------------------------
+
+    def _grant_pass(self) -> None:
+        """Before each paged decode: make sure every resident lane's next
+        write slot has a physical block.  Grants collect into one device-side
+        kv_pos reset; lanes that can't be granted park (masked inactive, no
+        writes — a parked lane can never corrupt a neighbour).  If parking
+        leaves nothing runnable, evict the youngest parked lane back onto
+        the queue (recompute) and retry — blocks free, progress resumes."""
+        while True:
+            fresh: List[int] = []
+            parked: List[int] = []
+            for i, st in enumerate(self.slots):
+                if st is None:
+                    continue
+                lb = (st.pos % self.pool.ring_len) // self.pool.block_size
+                if self.pool.table[i, lb] >= 0:
+                    if self._pos[i] < 0:      # granted now — unpark
+                        self._pos[i] = st.pos
+                    continue
+                try:
+                    fresh.append(self.pool.grant(i, lb))
+                    if self._pos[i] < 0:
+                        self._pos[i] = st.pos
+                except RuntimeError:          # pool exhausted — park
+                    if self._pos[i] >= 0:
+                        self.metrics.record_park()
+                    self._pos[i] = -1
+                    parked.append(i)
+            self.pool.reset_blocks(fresh)
+            runnable = any(s is not None and self._pos[i] >= 0
+                           for i, s in enumerate(self.slots))
+            if runnable or not parked:
+                return
+            if len(parked) == len([s for s in self.slots if s is not None]) \
+                    and len(parked) == 1:
+                raise RuntimeError(
+                    f"paged pool too small: a single resident request "
+                    f"cannot grow ({self.pool.pool_blocks} blocks of "
+                    f"{self.pool.block_size})")
+            victim = max(parked,
+                         key=lambda i: (self.slots[i].admitted_step, i))
+            self._evict(victim)
+
+    def _evict(self, slot: int) -> None:
+        """Evict a parked lane: free its blocks, requeue the request at the
+        queue head with prompt := original prompt + everything generated
+        (recompute on re-admission).  ``max_new_tokens`` stays the ORIGINAL
+        horizon — ``GenState.generated`` carries the prior tokens, so the
+        remaining-budget arithmetic, the per-token fold_in sample counter,
+        and greedy continuations are all identical to the uninterrupted
+        run."""
+        st = self.slots[slot]
+        req = st.request
+        res = req.resume or {}
+        orig_prompt_len = int(res.get("prompt_len", req.prompt_len))
+        orig_prompt = np.asarray(req.prompt, np.int32)[:orig_prompt_len]
+        done = np.asarray(st.generated, np.int32)   # prior + this residency
+        resumed = Request(
+            id=req.id, prompt=np.concatenate([orig_prompt, done]),
+            max_new_tokens=req.max_new_tokens,
+            sampling=req.sampling, eos_id=req.eos_id, arrival_step=0,
+            stream=req.stream,
+            resume={"generated": [int(t) for t in done],
+                    "prompt_len": orig_prompt_len,
+                    "first_token_time": res.get("first_token_time")
+                    or st.first_token_time})
+        self.slots[slot] = None
+        self._pos[slot] = -1
+        self._tok[slot, 0] = 0
+        self.pool.release(slot)
+        self.metrics.record_evict()
+        self.scheduler.requeue_front([resumed])
+
+    # -- decode / retire -----------------------------------------------------
 
     def _decode(self) -> None:
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and self._pos[i] >= 0]
         if not active:
             return
         batch = {
@@ -224,12 +365,17 @@ class ForecastEngine:
             "key": jnp.asarray(self._key),
             "t": jnp.asarray(self._t),
         }
+        if self.paged:
+            batch["block_tbl"] = jnp.asarray(self.pool.table)
+            batch["ring_len"] = jnp.asarray(self.pool.ring_len, jnp.int32)
         t0 = time.perf_counter()
         tok, self.pool.cache = self._step_fn(self.params, self.pool.cache,
                                              batch)
         tok_np = np.asarray(tok)              # blocks until the step lands
-        self.metrics.record_decode_step(len(active), len(active),
-                                        time.perf_counter() - t0)
+        self.metrics.record_decode_step(
+            len(active), len(active), time.perf_counter() - t0,
+            in_flight=self.active_requests,
+            blocks_in_use=self.pool.blocks_in_use)
         now = time.perf_counter()
         for i in active:
             st = self.slots[i]
@@ -258,13 +404,15 @@ class ForecastEngine:
         self._key[slot] = 0
         self._t[slot] = 0
         self.pool.release(slot)
-        ttft = st.first_token_time - self._submit_time.get(
+        res = st.request.resume or {}
+        first_tok = res.get("first_token_time") or st.first_token_time
+        ttft = first_tok - self._submit_time.get(
             st.request.id, st.admitted_time)
         self.metrics.record_finish(ttft)
         self.finished[st.request.id] = FinishedRequest(
             id=st.request.id,
             tokens=np.asarray(st.generated, np.int32),
-            prompt_len=st.request.prompt_len,
+            prompt_len=res.get("prompt_len", st.request.prompt_len),
             admitted_step=st.admitted_step,
             finished_step=self.step_count,
             ttft_s=ttft,

@@ -15,6 +15,8 @@ from typing import Dict, List
 @dataclasses.dataclass
 class EngineMetrics:
     num_slots: int
+    pool_blocks: int = 0                      # physical cache blocks (paged:
+                                              # real blocks; lanes otherwise)
     started: float = dataclasses.field(default_factory=time.perf_counter)
     finished_at: float = 0.0
     decode_steps: int = 0
@@ -23,6 +25,10 @@ class EngineMetrics:
     requests_admitted: int = 0
     requests_finished: int = 0
     occupancy_sum: float = 0.0                # sum over steps of active/slots
+    block_util_sum: float = 0.0               # sum over steps of used/pool
+    peak_in_flight: int = 0                   # max resident requests
+    parked_events: int = 0                    # block-grant failures (paged)
+    evictions: int = 0                        # livelock-breaking evictions
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     first_step_s: float = 0.0                 # jit-compile-laden first step
     steady_decode_s: float = 0.0              # decode wall time past step 1
@@ -32,7 +38,8 @@ class EngineMetrics:
         self.prefill_tokens += prompt_len
 
     def record_decode_step(self, active: int, tokens_out: int,
-                           elapsed_s: float) -> None:
+                           elapsed_s: float, *, in_flight: int = 0,
+                           blocks_in_use: int = 0) -> None:
         if self.decode_steps == 0:
             self.first_step_s = elapsed_s
         else:
@@ -40,6 +47,14 @@ class EngineMetrics:
         self.decode_steps += 1
         self.decode_tokens += tokens_out
         self.occupancy_sum += active / max(self.num_slots, 1)
+        self.block_util_sum += blocks_in_use / max(self.pool_blocks, 1)
+        self.peak_in_flight = max(self.peak_in_flight, in_flight or active)
+
+    def record_park(self) -> None:
+        self.parked_events += 1
+
+    def record_evict(self) -> None:
+        self.evictions += 1
 
     def record_finish(self, ttft_s: float) -> None:
         self.requests_finished += 1
@@ -65,4 +80,13 @@ class EngineMetrics:
             "max_ttft_s": max(self.ttft_s) if self.ttft_s else 0.0,
             "mean_occupancy": (self.occupancy_sum / self.decode_steps
                                if self.decode_steps else 0.0),
+            # block-level utilization: the paged pool's win shows up here —
+            # lanes can sit near-full while blocks (actual HBM) do not
+            "mean_block_utilization": (
+                self.block_util_sum / self.decode_steps
+                if self.decode_steps else 0.0),
+            "pool_blocks": self.pool_blocks,
+            "peak_in_flight": self.peak_in_flight,
+            "parked_events": self.parked_events,
+            "evictions": self.evictions,
         }

@@ -40,6 +40,11 @@ class Request:
     eos_id: Optional[int] = None              # optional stop token
     arrival_step: int = 0                     # earliest engine step admitting
     stream: Optional[StreamFn] = None         # per-token streaming callback
+    # engine-internal (eviction/recompute): a request re-queued mid-decode
+    # carries its already-generated tokens in the prompt; ``resume`` records
+    # {"generated": [...], "prompt_len": orig} so emitted output, sampling
+    # counters and the finished record stay those of the original request
+    resume: Optional[dict] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -55,8 +60,14 @@ class Request:
 
     @property
     def total_tokens(self) -> int:
-        """Worst-case footprint: prompt + full horizon (admission budget)."""
-        return self.prompt_len + self.max_new_tokens
+        """Worst-case footprint: prompt + full horizon (admission budget).
+        A resumed request's prompt carries its already-generated tokens,
+        which its (unchanged, original) horizon already counts — subtract
+        them so eviction/recompute never inflates the budget a request
+        was admitted under (it would become permanently unadmittable
+        against a tight ``max_tokens_in_flight``)."""
+        resumed = len(self.resume["generated"]) if self.resume else 0
+        return self.prompt_len - resumed + self.max_new_tokens
 
 
 @dataclasses.dataclass

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Callable, Deque, List, Optional
 
 from repro.serve.request import Request
 
@@ -51,6 +51,12 @@ class FIFOScheduler:
     def submit(self, request: Request) -> None:
         self._queue.append(request)
 
+    def requeue_front(self, requests: List[Request]) -> None:
+        """Push evicted/unplaceable requests back at the head (order
+        preserved) — they stay first in line, FIFO fairness intact."""
+        for r in reversed(requests):
+            self._queue.appendleft(r)
+
     def __len__(self) -> int:
         return len(self._queue)
 
@@ -59,11 +65,23 @@ class FIFOScheduler:
         return len(self._queue)
 
     def admit(self, *, now_step: int, free_slots: int,
-              tokens_in_flight: int) -> List[Request]:
-        """Pop the FIFO prefix admissible this step."""
+              tokens_in_flight: int, free_blocks: int = -1,
+              blocks_needed: Optional[Callable[[Request], int]] = None
+              ) -> List[Request]:
+        """Pop the FIFO prefix admissible this step.
+
+        With a paged pool, admission is accounted in *blocks* rather than
+        lanes: ``free_blocks`` is the pool's current free-list size and
+        ``blocks_needed(req)`` prices a request at its prefill block count
+        (decode growth is granted on demand, parking on exhaustion) — a
+        short request no longer costs a whole ``cache_len`` lane, which is
+        exactly where the paged concurrency win comes from.  ``free_blocks``
+        < 0 (contiguous lanes) disables block accounting.
+        """
         cfg = self.config
         out: List[Request] = []
         prefill_used = 0
+        blocks_used = 0
         while self._queue and len(out) < free_slots:
             req = self._queue[0]
             if req.arrival_step > now_step:
@@ -71,10 +89,15 @@ class FIFOScheduler:
             if cfg.max_tokens_in_flight > 0 and tokens_in_flight + \
                     req.total_tokens > cfg.max_tokens_in_flight:
                 break
+            if free_blocks >= 0 and blocks_needed is not None and \
+                    blocks_used + blocks_needed(req) > free_blocks:
+                break                          # pool full — wait for frees
             if cfg.prefill_chunk > 0 and prefill_used > 0 and \
                     prefill_used + req.prompt_len > cfg.prefill_chunk:
                 break                          # chunk full — next step
             out.append(self._queue.popleft())
             prefill_used += req.prompt_len
             tokens_in_flight += req.total_tokens
+            if blocks_needed is not None:
+                blocks_used += blocks_needed(req)
         return out

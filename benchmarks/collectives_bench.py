@@ -1,0 +1,157 @@
+"""Collectives microbench — the federated communication fast path.
+
+Two A/Bs, both in a subprocess (the emulated device count must be set
+before jax initializes):
+
+  * ring vs XLA psum at matched payload, per wire format: per-device bytes
+    per aggregation round (the kernel's measured byte ledger — identical to
+    the ``ring_wire_plan`` accounting) and wall time per round on the
+    emulated 8-way data mesh.  The headline number: the int8 wire moves
+    <= 0.27x the bytes of the f32 psum baseline.
+  * ZeRO-1 AdamW gather vs scatter formulation: compiled collective bytes
+    from the dry-run HLO cost model (``repro.launch.hlo_cost``) — the
+    scatter-update schedule must be strictly smaller.
+
+``benchmarks/run.py --only collectives`` writes the rows to
+``BENCH_collectives.json`` (the per-PR comm-perf trajectory artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+_SUB = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.pop("REPRO_FED_WIRE", None)
+os.environ.pop("REPRO_FED_RING", None)
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.comm import ring_wire_plan
+from repro.dist import fed, fedcomm
+
+FULL = __FULL__
+E = (1 << 22) if FULL else (1 << 20)          # payload elems per member
+ITERS = 5
+mesh = jax.make_mesh((8, 1), ("data", "model"))
+ndev = 8
+rng = np.random.default_rng(0)
+n = 8
+members = {"lora_a": jnp.asarray(rng.normal(size=(n, E)).astype(np.float32))}
+w = jnp.full((n,), 1.0 / n)
+exact = np.asarray(members["lora_a"]).mean(axis=0)
+
+
+def timed(f):
+    f()                                        # compile
+    ts = []
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6          # us
+
+
+rows = []
+with mesh:
+    # --- XLA psum baseline (f32; assumed ring lowering => classic bytes)
+    os.environ["REPRO_FED_RING"] = "0"
+    us = timed(lambda: fed.aggregate_adapters(members, w, mesh))
+    del os.environ["REPRO_FED_RING"]
+    f32_psum_bytes = ring_wire_plan(E, ndev, "f32").per_device_bytes
+    rows.append({"case": "psum_xla", "wire": "f32",
+                 "bytes_per_round": f32_psum_bytes, "us_per_round": us,
+                 "bytes_vs_f32_psum": 1.0})
+
+    # --- hand-rolled bidirectional ring, every wire format
+    for wire in ("f32", "bf16", "int8"):
+        ledger = []
+        out = fedcomm.ring_aggregate(members, w, mesh, wire=wire,
+                                     byte_ledger=ledger)
+        measured = sum(b for _, b in ledger)
+        plan = ring_wire_plan(E, ndev, wire)
+        assert measured == plan.per_device_bytes, (wire, measured, plan)
+        err = float(np.abs(np.asarray(out["lora_a"]) - exact).max())
+        us = timed(lambda: fedcomm.ring_aggregate(members, w, mesh,
+                                                  wire=wire))
+        rows.append({"case": "ring", "wire": wire,
+                     "bytes_per_round": measured, "us_per_round": us,
+                     "bytes_vs_f32_psum": measured / f32_psum_bytes,
+                     "max_abs_err": err})
+
+# --- ZeRO-1 update: gather vs scatter collective term (dry-run cost model)
+from repro.configs import get_smoke_config
+from repro.launch.hlo_cost import analyze
+from repro.models.registry import get_model
+from repro.dist.sharding import param_specs, opt_state_specs, to_shardings
+from repro.optim.adamw import adamw_init, adamw_update, adamw_update_zero1
+
+cfg = get_smoke_config("qwen3-0.6b")
+api = get_model(cfg)
+zmesh = jax.make_mesh((4, 2), ("data", "model"))
+params = api.init(cfg, jax.random.PRNGKey(0))
+opt = adamw_init(params)
+psh = to_shardings(param_specs(params, zmesh), zmesh)
+osh = to_shardings(opt_state_specs(params, zmesh), zmesh)
+with zmesh:
+    for name, fn in (("zero1_gather",
+                      lambda p, g, s: adamw_update(p, g, s, 3)),
+                     ("zero1_scatter",
+                      lambda p, g, s: adamw_update_zero1(p, g, s, 3,
+                                                         mesh=zmesh))):
+        jitted = jax.jit(fn, in_shardings=(psh, psh, {"mu": osh, "nu": osh}),
+                         out_shardings=(psh, {"mu": osh, "nu": osh}))
+        parsed = analyze(jitted.lower(params, params, opt).compile()
+                         .as_text())
+        rows.append({"case": name,
+                     "collective_bytes": parsed["collective_total_bytes"],
+                     "by_kind": parsed["collective_bytes"]})
+
+for r in rows:
+    print("ROW " + json.dumps(r), flush=True)
+"""
+
+
+def run(full: bool = False):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", _SUB.replace("__FULL__", str(full))],
+        env=env, capture_output=True, text=True, timeout=3600)
+    if r.returncode != 0:
+        raise RuntimeError(f"collectives subprocess failed:\n{r.stdout}\n"
+                           f"{r.stderr}")
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW "):
+            rows.append(emit("collectives", **json.loads(line[4:])))
+    scatter = next(x for x in rows if x.get("case") == "zero1_scatter")
+    gather = next(x for x in rows if x.get("case") == "zero1_gather")
+    int8 = next(x for x in rows if x.get("case") == "ring"
+                and x.get("wire") == "int8")
+    rows.append(emit(
+        "collectives_summary",
+        int8_vs_f32_psum=round(int8["bytes_vs_f32_psum"], 4),
+        int8_under_027=int8["bytes_vs_f32_psum"] <= 0.27,
+        zero1_scatter_smaller=(scatter["collective_bytes"] <
+                               gather["collective_bytes"]),
+        zero1_collective_cut=round(
+            1 - scatter["collective_bytes"] / gather["collective_bytes"],
+            4)))
+    return rows
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(ap.parse_args().full)
+
+
+if __name__ == "__main__":
+    main()

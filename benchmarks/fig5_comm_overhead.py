@@ -45,8 +45,14 @@ def run(full: bool = False):
     k = ft.num_clusters
     rounds = 70 if full else 10          # paper: FedTime converges in ~70
 
+    # baseline pinned to f32: the row's meaning must not drift with an
+    # ambient REPRO_FED_WIRE — the figure exists to show the comparison
     ftime = comm.fedtime_round(params, clients_per_round=n_round,
-                               num_clusters=k)
+                               num_clusters=k, wire="f32")
+    # the communication fast path's wire format (REPRO_FED_WIRE=int8):
+    # int8 codes + per-qblock absmax scales, error-feedback debiased
+    fti8 = comm.fedtime_round(params, clients_per_round=n_round,
+                              num_clusters=k, wire="int8")
     ffull = comm.fed_full_round(params, clients_per_round=n_round,
                                 num_clusters=k)
     cen = comm.centralized_epoch(num_samples=1_500_000 if full else 10_000,
@@ -54,6 +60,7 @@ def run(full: bool = False):
                                  channels=54, num_clients=ft.num_clients)
 
     for name, st, n in [("fedtime", ftime, rounds),
+                        ("fedtime_int8", fti8, rounds),
                         ("fed_full_model", ffull, rounds),
                         ("centralized_data", cen, 1)]:
         emit("fig5", method=name,
@@ -70,9 +77,11 @@ def run(full: bool = False):
     for mesh_shape, name in [({"data": 16, "model": 16}, "single_pod"),
                              ({"pod": 2, "data": 16, "model": 16},
                               "multi_pod")]:
-        cb = comm.collective_bytes_per_round(params, mesh_shape)
-        emit("fig5_mesh", mesh=name,
-             **{f"{k}_mb": round(v / 1e6, 3) for k, v in cb.items()})
+        for wire in ("f32", "int8"):
+            cb = comm.collective_bytes_per_round(params, mesh_shape,
+                                                 wire=wire)
+            emit("fig5_mesh", mesh=name, wire=wire,
+                 **{f"{k}_mb": round(v / 1e6, 3) for k, v in cb.items()})
 
 
 def main():

@@ -22,13 +22,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma-separated subset (table2,table3,fig2,fig3,"
-                         "fig5,fig6,kernels,serving,roofline)")
+                         "fig5,fig6,kernels,serving,collectives,roofline)")
     args = ap.parse_args()
 
-    from benchmarks import (fig2_lookback, fig3_convergence,
-                            fig5_comm_overhead, fig6_ablation, kernels_bench,
-                            serving_bench, table2_forecasting,
-                            table3_federated)
+    from benchmarks import (collectives_bench, fig2_lookback,
+                            fig3_convergence, fig5_comm_overhead,
+                            fig6_ablation, kernels_bench, serving_bench,
+                            table2_forecasting, table3_federated)
 
     suites = {
         "table2": table2_forecasting.run,      # Table 2: MSE/MAE grid
@@ -39,6 +39,7 @@ def main() -> None:
         "fig6": fig6_ablation.run,             # Fig 6: ablation
         "kernels": kernels_bench.run,          # kernel microbench
         "serving": serving_bench.run,          # engine + paged-pool A/Bs
+        "collectives": collectives_bench.run,  # ring vs psum + ZeRO-1 A/Bs
     }
     only = set(filter(None, args.only.split(",")))
     unknown = only - set(suites) - {"roofline"}
@@ -63,6 +64,12 @@ def main() -> None:
                 with open("BENCH_serving.json", "w") as f:
                     json.dump({"full": args.full, "rows": rows}, f, indent=2)
                 print("# wrote BENCH_serving.json", flush=True)
+            if name == "collectives" and rows:
+                # the comm-perf trajectory artifact: ring vs psum bytes/us
+                # per wire + ZeRO-1 gather vs scatter collective term
+                with open("BENCH_collectives.json", "w") as f:
+                    json.dump({"full": args.full, "rows": rows}, f, indent=2)
+                print("# wrote BENCH_collectives.json", flush=True)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1

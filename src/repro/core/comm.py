@@ -9,17 +9,124 @@ matching the paper's Figure 5 baselines:
   * centralized  — raw windowed data shipped to the server once per epoch
 
 Mesh mapping (DESIGN.md §3): on the dry-run mesh, intra-cluster aggregation
-is a psum over the ``data`` axis and cross-site aggregation crosses ``pod``;
-``collective_bytes_per_round`` reports what each axis carries so the §Roofline
-collective term and the paper's comm metric are the same quantity measured
-two ways.
+is a ring all-reduce over the ``data`` axis and cross-site aggregation
+crosses ``pod``; ``collective_bytes_per_round`` reports what each axis
+carries so the §Roofline collective term and the paper's comm metric are the
+same quantity measured two ways.
+
+Wire formats (``REPRO_FED_WIRE``): the federated payload can cross the wire
+as f32, bf16, or int8 codes with per-``qblock`` f32 absmax scales
+(``REPRO_FED_QBLOCK``, default 128).  ``ring_wire_plan`` is the single
+source of truth for the chunk geometry and per-hop transfer sizes of the
+hand-rolled bidirectional ring (``repro.kernels.ring_allreduce``); the
+kernel sizes its wire buffers from this plan, ``repro.dist.fed
+.expected_collective_bytes`` and ``collective_bytes_per_round`` recompute
+the same totals, and ``tests/test_ring_collective.py`` keeps all three in
+agreement — one number measured three ways.
 """
 
 from __future__ import annotations
 
+import math
+import os
 from dataclasses import dataclass
 
-from repro.core.lora import lora_tree, tree_nbytes
+from repro.core.lora import count_params, lora_tree, tree_nbytes
+
+# ---------------------------------------------------------------------------
+# Wire formats
+# ---------------------------------------------------------------------------
+
+WIRE_FORMATS = ("f32", "bf16", "int8")
+_WIRE_CODE_BYTES = {"f32": 4, "bf16": 2, "int8": 1}
+
+
+def _check_wire(wire: str) -> str:
+    if wire not in WIRE_FORMATS:
+        raise ValueError(f"wire format {wire!r}: choose from {WIRE_FORMATS}")
+    return wire
+
+
+def wire_format(default: str = "f32") -> str:
+    """Effective federated wire format (``REPRO_FED_WIRE``, read per call
+    like every REPRO_ flag)."""
+    return _check_wire(os.environ.get("REPRO_FED_WIRE", default))
+
+
+def wire_qblock() -> int:
+    """Absmax-scale block size for the int8 wire (``REPRO_FED_QBLOCK``).
+    128 keeps blocks lane-aligned on TPU and the scale overhead at
+    4/128 bytes per element."""
+    return int(os.environ.get("REPRO_FED_QBLOCK", "128"))
+
+
+@dataclass(frozen=True)
+class RingWirePlan:
+    """Chunk geometry of one n-way bidirectional ring all-reduce.
+
+    The payload (``elems`` f32 values) is carved into ``n_chunks = 2·n``
+    chunks — n rotating clockwise, n counter-clockwise, using both ICI
+    directions.  ``chunk_elems`` is ceil(elems / 2n), rounded up to a
+    ``qblock`` multiple for the quantized wires (int8 scales cover full
+    blocks; bf16 shares the alignment so the fused hop kernel tiles
+    (rows, qblock)); the padding is real wire bytes and is counted.  Per
+    round every device sends each direction's chunk once per reduce-scatter
+    hop and once per all-gather hop: ``sends = 2 phases · (n-1) hops ·
+    2 directions``.  For the f32 wire on a divisible payload this reduces
+    exactly to the classic 2·P·(n-1)/n.
+    """
+    wire: str
+    n: int
+    qblock: int
+    elems: int
+    chunk_elems: int
+    n_chunks: int
+    code_bytes: int      # per chunk
+    scale_bytes: int     # per chunk (int8 wire only)
+    sends: int           # chunk transfers per device per round
+
+    @property
+    def chunk_bytes(self) -> int:
+        return self.code_bytes + self.scale_bytes
+
+    @property
+    def per_device_bytes(self) -> int:
+        return self.sends * self.chunk_bytes
+
+
+def ring_wire_plan(n_elems: int, n: int, wire: str = None,
+                   qblock: int = None) -> RingWirePlan:
+    """The ring chunking ``repro.kernels.ring_allreduce`` actually uses —
+    byte accounting and wire-buffer sizing share this one function."""
+    wire = _check_wire(wire) if wire else wire_format()
+    qblock = qblock or wire_qblock()
+    if n <= 1:
+        return RingWirePlan(wire, n, qblock, n_elems, n_elems, 1, 0, 0, 0)
+    c = math.ceil(n_elems / (2 * n))
+    if wire in ("int8", "bf16"):
+        c = math.ceil(c / qblock) * qblock
+    code = c * _WIRE_CODE_BYTES[wire]
+    scale = 4 * (c // qblock) if wire == "int8" else 0
+    return RingWirePlan(wire, n, qblock, n_elems, c, 2 * n, code, scale,
+                        sends=4 * (n - 1))
+
+
+def ring_wire_bytes(n_elems: int, n: int, wire: str = None,
+                    qblock: int = None) -> int:
+    """Per-device bytes one n-way bidirectional ring all-reduce moves."""
+    return ring_wire_plan(n_elems, n, wire, qblock).per_device_bytes
+
+
+def wire_payload_bytes(n_elems: int, wire: str = None,
+                       qblock: int = None) -> int:
+    """Point-to-point upload size of an ``n_elems`` f32 payload on the
+    given wire (client -> server, no ring): codes + absmax scales."""
+    wire = _check_wire(wire) if wire else wire_format()
+    qblock = qblock or wire_qblock()
+    bytes_ = n_elems * _WIRE_CODE_BYTES[wire]
+    if wire == "int8":
+        bytes_ += 4 * math.ceil(n_elems / qblock)
+    return bytes_
 
 
 @dataclass(frozen=True)
@@ -45,10 +152,13 @@ class RoundStats:
 
 
 def fedtime_round(params, *, clients_per_round: int, num_clusters: int,
-                  link: LinkModel = LinkModel()) -> RoundStats:
+                  link: LinkModel = LinkModel(),
+                  wire: str = None) -> RoundStats:
     """LoRA-only payload: each participating client uploads its adapter
-    delta; each cluster broadcasts one aggregated adapter back."""
-    payload = tree_nbytes(lora_tree(params))
+    delta; each cluster broadcasts one aggregated adapter back.  ``wire``
+    (default ``REPRO_FED_WIRE``) prices the payload in its wire encoding —
+    int8 codes + per-qblock absmax scales cut the round to ~26% of f32."""
+    payload = wire_payload_bytes(count_params(lora_tree(params)), wire)
     up = payload * clients_per_round
     down = payload * clients_per_round        # broadcast back to participants
     msgs = 2 * clients_per_round + num_clusters   # +cluster->server merges
@@ -79,20 +189,21 @@ def centralized_epoch(num_samples: int, lookback: int, horizon: int,
     return RoundStats(up, 0, msgs, t)
 
 
-def collective_bytes_per_round(params, mesh_shape) -> dict:
+def collective_bytes_per_round(params, mesh_shape, wire: str = None) -> dict:
     """Bytes crossing each mesh axis for one aggregation round when the
     federation is mapped onto the dry-run mesh (clients -> data axis,
-    sites -> pod axis). An all-reduce of payload P over an n-way axis moves
-    2·P·(n-1)/n per device (ring).
+    sites -> pod axis), in the ``wire`` encoding (default
+    ``REPRO_FED_WIRE``).  The count is the exact bidirectional-ring plan of
+    ``ring_wire_plan`` — for the f32 wire on a divisible payload it reduces
+    to the classic 2·P·(n-1)/n per device.
 
     ``mesh_shape`` may be a ``jax.sharding.Mesh`` (its ``.shape`` is used)
     or a plain ``{axis: size}`` dict.  ``repro.dist.fed`` derives the same
-    quantity from its psum axis mapping; ``tests/test_dist_fed_mapping.py``
-    keeps the two in agreement."""
+    quantity from its ring axis mapping and the kernel's byte ledger
+    measures it from the actual ppermute buffers;
+    ``tests/test_dist_fed_mapping.py`` / ``tests/test_ring_collective.py``
+    keep the three in agreement."""
     shape = dict(getattr(mesh_shape, "shape", mesh_shape))
-    payload = tree_nbytes(lora_tree(params))
-    out = {}
-    for axis in ("data", "pod"):
-        n = shape.get(axis, 1)
-        out[axis] = 0 if n <= 1 else int(2 * payload * (n - 1) / n)
-    return out
+    elems = count_params(lora_tree(params))
+    return {axis: ring_wire_bytes(elems, shape.get(axis, 1), wire)
+            for axis in ("data", "pod")}

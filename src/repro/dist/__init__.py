@@ -7,8 +7,14 @@ head-sharding), and input batches (data parallelism with replication
 fallback).
 
 ``repro.dist.fed`` — FedTime's Algorithm 1 aggregation mapped onto mesh
-collectives: cluster aggregation is a psum over ``data``, cross-site
+collectives: cluster aggregation reduces over ``data``, cross-site
 aggregation crosses ``pod``.
+
+``repro.dist.fedcomm`` — the communication fast path those axes run on:
+the hand-rolled bidirectional ring all-reduce
+(``repro.kernels.ring_allreduce``) with the ``REPRO_FED_WIRE`` quantized
+wire format and carried error-feedback residuals, plus the host-loop wire
+emulation used by ``train/fed_trainer``.
 
 ``repro.dist.decode`` — the decode step for seq-sharded caches: per-shard
 flash-decode (m, l, acc) partials combined with a pmax/psum over ``model``.

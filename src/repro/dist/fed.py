@@ -9,12 +9,21 @@ adapters to replication, the payload each round is exactly the LoRA tree —
 FedTime's communication profile (paper Fig. 5): base weights receive no
 grads and no traffic.
 
+The aggregation itself runs on the communication fast path by default:
+``repro.dist.fedcomm.ring_aggregate`` — the hand-rolled bidirectional ring
+all-reduce of ``repro.kernels.ring_allreduce`` on the ``REPRO_FED_WIRE``
+wire format (int8 codes + absmax scales, bf16, or f32), with f32 master
+accumulation and an error-feedback residual carried between rounds.
+``REPRO_FED_RING=0`` restores the generic XLA psum lowering.
+
 ``expected_collective_bytes`` recomputes the per-device ring all-reduce
-bytes implied by this axis mapping.  ``repro.core.comm
-.collective_bytes_per_round`` measures the same quantity from the comm-
-accounting side; ``tests/test_dist_fed_mapping.py`` keeps the two in
-agreement so the §Roofline collective term and the paper's Fig. 5 comm
-metric remain one number measured two ways.
+bytes implied by this axis mapping (exact chunk plan, wire encoding
+included).  ``repro.core.comm.collective_bytes_per_round`` measures the
+same quantity from the comm-accounting side, and the kernel's byte ledger
+measures it from the actual ppermute buffers;
+``tests/test_dist_fed_mapping.py`` and ``tests/test_ring_collective.py``
+keep the three in agreement so the §Roofline collective term and the
+paper's Fig. 5 comm metric remain one number measured three ways.
 """
 
 from __future__ import annotations
@@ -41,24 +50,44 @@ def aggregation_axes(mesh) -> tuple:
                  if shape.get(ax, 1) > 1)
 
 
-def ring_allreduce_bytes(payload_bytes: int, n: int) -> int:
-    """Per-device bytes moved by an ``n``-way ring all-reduce of a payload:
-    2·P·(n-1)/n (reduce-scatter + all-gather phases)."""
-    return 0 if n <= 1 else int(2 * payload_bytes * (n - 1) / n)
+def ring_allreduce_bytes(payload_bytes: int, n: int, *,
+                         wire: str = "f32") -> int:
+    """Per-device bytes moved by an ``n``-way bidirectional ring all-reduce
+    of an f32 payload of ``payload_bytes``, in the ``wire`` encoding.
+
+    The count is the kernel's exact chunk plan
+    (``repro.core.comm.ring_wire_plan``), not the idealized continuous
+    formula: the payload is carved into 2·n chunks of
+    ceil(elems / 2n) elements (quantized wires round the chunk up to a
+    ``REPRO_FED_QBLOCK`` multiple so absmax scales cover whole blocks), a
+    device sends each chunk once per reduce-scatter hop and once per
+    all-gather hop, and the int8 wire's per-chunk f32 scales are counted.
+    On a divisible f32 payload this reduces exactly to the classic
+    2·P·(n-1)/n; non-divisible payloads pay their real padding instead of
+    silently truncating to the float formula."""
+    from repro.core.comm import ring_wire_bytes
+    return ring_wire_bytes(-(-payload_bytes // 4), n, wire)
 
 
 def adapter_payload_bytes(params) -> int:
-    """Bytes of the federated payload — the LoRA tree only."""
+    """Bytes of the federated payload — the LoRA tree only (f32)."""
     return tree_nbytes(lora_tree(params))
 
 
-def expected_collective_bytes(params, mesh) -> dict:
+def expected_collective_bytes(params, mesh, wire: str = None) -> dict:
     """Per-axis ring all-reduce bytes for one aggregation round under this
-    module's axis mapping.  Must agree with
-    ``repro.core.comm.collective_bytes_per_round``."""
+    module's axis mapping, on the given wire format (default
+    ``REPRO_FED_WIRE``).  Must agree with
+    ``repro.core.comm.collective_bytes_per_round`` and with the ring
+    kernel's measured byte ledger.  Counts payload ELEMENTS directly (like
+    the accounting side), so the agreement holds whatever dtype the
+    adapters are stored in."""
+    from repro.core.comm import ring_wire_bytes, wire_format
+    from repro.core.lora import count_params
     shape = _mesh_shape(mesh)
-    payload = adapter_payload_bytes(params)
-    return {ax: ring_allreduce_bytes(payload, shape.get(ax, 1))
+    elems = count_params(lora_tree(params))
+    wire = wire or wire_format()
+    return {ax: ring_wire_bytes(elems, shape.get(ax, 1), wire)
             for ax in (CLUSTER_AXIS, CROSS_SITE_AXIS)}
 
 
@@ -72,15 +101,28 @@ def fed_psum(tree, mesh):
     return jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
 
 
-def aggregate_adapters(member_adapters, weights, mesh=None):
+def aggregate_adapters(member_adapters, weights, mesh=None, *,
+                       wire: str = None, state: dict = None,
+                       byte_ledger: list = None):
     """Algorithm 1, lines 12-14: weighted aggregation of member adapter
     trees, Σ_k w_k · Δ_k with Σ w_k = 1 (w_k = n_k / n cluster sizes).
 
     Every leaf of ``member_adapters`` carries a leading member dim of size
-    ``len(weights)``.  Without a real multi-axis mesh this reduces locally;
-    on a mesh whose federation axes are live, the member dim is sharded
-    over them and the reduction lowers to an explicit ring all-reduce —
-    the mesh-collective form of the paper's cluster aggregation."""
+    ``len(weights)``.  Without a real multi-axis mesh this reduces locally.
+    On a mesh whose federation axes are live, the member dim is sharded
+    over them and the reduction is the hand-rolled bidirectional ring
+    all-reduce on the ``wire`` format (default ``REPRO_FED_WIRE``) —
+    ``repro.dist.fedcomm.ring_aggregate``, which also accepts the
+    error-feedback ``state`` and the measuring ``byte_ledger``; passing
+    ``state`` makes this return ``(tree, new_state)``.  ``REPRO_FED_RING=0``
+    restores the generic psum lowering below."""
+    from repro.dist import fedcomm
+    axes = aggregation_axes(mesh) if mesh is not None else ()
+    if axes and isinstance(mesh, Mesh) and fedcomm.ring_enabled():
+        return fedcomm.ring_aggregate(member_adapters, weights, mesh,
+                                      wire=wire, state=state,
+                                      byte_ledger=byte_ledger)
+
     weights = jnp.asarray(weights, jnp.float32)
     n = weights.shape[0]
 
@@ -88,9 +130,9 @@ def aggregate_adapters(member_adapters, weights, mesh=None):
         return (w.reshape((w.shape[0],) + (1,) * (a.ndim - 1)).astype(a.dtype)
                 * a).sum(axis=0)
 
-    axes = aggregation_axes(mesh) if mesh is not None else ()
     if not axes or not isinstance(mesh, Mesh):
-        return jax.tree.map(lambda a: wsum(weights, a), member_adapters)
+        out = jax.tree.map(lambda a: wsum(weights, a), member_adapters)
+        return out if state is None else (out, state)
 
     prod = 1
     for ax in axes:
@@ -109,4 +151,5 @@ def aggregate_adapters(member_adapters, weights, mesh=None):
         local = jax.tree.map(lambda a: wsum(w, a), ad)
         return jax.tree.map(lambda x: jax.lax.psum(x, axes), local)
 
-    return agg(member_adapters, weights)
+    out = agg(member_adapters, weights)
+    return out if state is None else (out, state)

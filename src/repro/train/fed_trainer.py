@@ -7,7 +7,16 @@ Phases (paper §3.2):
   3. Forecasting fine-tuning, federated, RevIN front end.
 
 Only LoRA adapters cross the "network"; every round's traffic is metered by
-``repro.core.comm`` (C5).
+``repro.core.comm`` (C5) in the configured wire format.
+
+Wire emulation (``REPRO_FED_WIRE``, or the ``wire=`` argument): each
+client's uploaded adapter delta passes through
+``repro.dist.fedcomm.quantize_update`` — the same int8/bf16 encode +
+error-feedback residual the mesh ring collective uses — so Algorithm 1
+aggregates exactly what the wire delivers, the residual is carried
+per-client between rounds (quantization noise does not bias the paper's
+aggregation), and ``comm.fedtime_round(..., wire=...)`` prices what was
+actually sent.  The default f32 wire is the identity.
 """
 
 from __future__ import annotations
@@ -68,10 +77,13 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                   init_adapters: Optional[dict] = None,
                   straggler_prob: float = 0.0,
                   secure_aggregation: bool = False,
+                  wire: Optional[str] = None,
                   progress: Optional[Callable[[str], None]] = None
                   ) -> FedResult:
     """client_data: list of (x (n,L,M), y (n,T,M)) per client."""
+    from repro.dist import fedcomm
     ft = cfg.fedtime
+    wire = wire or comm.wire_format()
     key = key if key is not None else jax.random.PRNGKey(0)
     k_init, k_lora, k_cl = jax.random.split(key, 3)
 
@@ -103,6 +115,7 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
     servers = [ClusterServer(adapters0) for _ in range(ft.num_clusters)]
     logs: List[RoundLog] = []
     rng = np.random.default_rng(7)
+    wire_residuals: dict = {}     # client -> flat EF residual across rounds
 
     for r in range(rounds):
         for c in range(ft.num_clusters):
@@ -126,6 +139,18 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                                          seed=1000 * r + int(s))
                 ad, l = local_update(loss_fn, params, servers[c].adapters,
                                      batches, steps=ft.local_steps)
+                if wire != "f32":
+                    # the upload is the adapter DELTA through the wire:
+                    # encode (+ carried residual), and hand the server the
+                    # dequantized view — what the network actually delivers
+                    delta = jax.tree.map(
+                        lambda a, g: a.astype(jnp.float32) -
+                        g.astype(jnp.float32), ad, servers[c].adapters)
+                    dq, wire_residuals[int(s)] = fedcomm.quantize_update(
+                        delta, wire_residuals.get(int(s)), wire=wire)
+                    ad = jax.tree.map(
+                        lambda g, d: g.astype(jnp.float32) + d,
+                        servers[c].adapters, dq)
                 updates.append(ad)
                 losses.append(float(l))
                 ws.append(weights_all[s])
@@ -148,7 +173,7 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
             servers[c].aggregate(updates, np.asarray(ws))
             stats = comm.fedtime_round(
                 params, clients_per_round=take,
-                num_clusters=ft.num_clusters)
+                num_clusters=ft.num_clusters, wire=wire)
             logs.append(RoundLog(r, c, float(np.mean(losses)), stats))
             if progress:
                 progress(f"round {r} cluster {c}: "

@@ -35,8 +35,20 @@ def fed_params():
 
 def test_ring_allreduce_formula():
     assert fed.ring_allreduce_bytes(1000, 1) == 0
-    assert fed.ring_allreduce_bytes(1000, 2) == 1000          # 2*P*(1/2)
-    assert fed.ring_allreduce_bytes(1600, 16) == 3000         # 2*P*(15/16)
+    # divisible payloads reduce to the classic 2*P*(n-1)/n
+    assert fed.ring_allreduce_bytes(1024, 2) == 1024          # 2*P*(1/2)
+    assert fed.ring_allreduce_bytes(4096, 4) == 6144          # 2*P*(3/4)
+    # non-divisible payloads pay their real chunk padding (the old float
+    # formula silently truncated): 250 elems -> 4 chunks of 63
+    assert fed.ring_allreduce_bytes(1000, 2) == 4 * 63 * 4
+    # 400 elems over n=16 -> 32 chunks of 13, 60 sends
+    assert fed.ring_allreduce_bytes(1600, 16) == 60 * 13 * 4
+    # quantized wire: int8 codes + one f32 scale per REPRO_FED_QBLOCK block
+    from repro.core.comm import ring_wire_plan
+    plan = ring_wire_plan(1 << 16, 4, "int8", qblock=128)
+    assert fed.ring_allreduce_bytes(1 << 18, 4, wire="int8") == \
+        plan.per_device_bytes
+    assert plan.scale_bytes == 4 * (plan.chunk_elems // 128)
 
 
 def test_aggregation_axes():
@@ -53,9 +65,11 @@ def test_fed_mapping_matches_comm_accounting(fed_params, mesh_shape):
     expected = fed.expected_collective_bytes(fed_params, mesh_shape)
     accounted = comm.collective_bytes_per_round(fed_params, mesh_shape)
     assert expected == accounted
-    # sanity: the single-pod round moves 2*P*(15/16) per device over data
+    # sanity: the single-pod round moves ~2*P*(15/16) per device over data
+    # (exact chunk plan — never less than the idealized continuous formula)
     payload = tree_nbytes(lora_tree(fed_params))
-    assert expected["data"] == int(2 * payload * 15 / 16)
+    assert expected["data"] == fed.ring_allreduce_bytes(payload, 16)
+    assert expected["data"] >= int(2 * payload * 15 / 16)
 
 
 def test_comm_accounting_accepts_mesh_object(fed_params):

@@ -4,12 +4,28 @@ roofline).  Prints ``name,key=value,...`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run            # fast (CPU-minutes)
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale settings
   PYTHONPATH=src python -m benchmarks.run --only table2,fig5
+  PYTHONPATH=src python -m benchmarks.run --only kernels --gate
+
+The three perf suites (kernels / serving / collectives) persist their rows
+into ``BENCH_<suite>.json`` through ``repro.obs.bench_gate.write_bench``:
+rows MERGE by identity key into whatever the file already holds (so
+``--only serving`` refreshes the serving rows without clobbering the other
+file's history — each suite owns its own file — and partial reruns within a
+suite keep unmatched old rows), and every write stamps provenance (git SHA,
+jax/jaxlib versions, device kind, REPRO_* env) next to the data.
+
+``--gate`` turns the runner into a regression gate: the committed
+``BENCH_*.json`` are loaded as BASELINE before the suites overwrite them,
+the fresh rows are compared metric-by-metric against
+``repro.obs.bench_gate.GATES`` (relative tolerance for wall-clock ratios,
+exact for deterministic byte/count invariants, absolute floors
+independent of baseline), and any regression fails the process — this is
+what CI runs.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 import traceback
@@ -23,12 +39,16 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma-separated subset (table2,table3,fig2,fig3,"
                          "fig5,fig6,kernels,serving,collectives,roofline)")
+    ap.add_argument("--gate", action="store_true",
+                    help="compare fresh perf rows against the committed "
+                         "BENCH_*.json baselines and exit 1 on regression")
     args = ap.parse_args()
 
     from benchmarks import (collectives_bench, fig2_lookback,
                             fig3_convergence, fig5_comm_overhead,
                             fig6_ablation, kernels_bench, serving_bench,
                             table2_forecasting, table3_federated)
+    from repro.obs import bench_gate
 
     suites = {
         "table2": table2_forecasting.run,      # Table 2: MSE/MAE grid
@@ -47,7 +67,18 @@ def main() -> None:
         ap.error(f"unknown suite(s) {sorted(unknown)}; choose from "
                  f"{sorted(suites) + ['roofline']}")
 
+    # gate baselines must be read BEFORE the suites rewrite the files
+    baselines = {}
+    if args.gate:
+        for suite in bench_gate.BENCH_SUITES:
+            base = bench_gate.load_bench(suite)
+            if base is None:
+                print(f"# gate: no committed BENCH_{suite}.json — "
+                      f"absolute bounds only", flush=True)
+            baselines[suite] = base
+
     failures = 0
+    gate_results: dict = {}
     for name, fn in suites.items():
         if only and name not in only:
             continue
@@ -55,21 +86,13 @@ def main() -> None:
         t0 = time.time()
         try:
             rows = fn(full=args.full)
-            if name == "kernels" and rows:
-                # the perf trajectory artifact: kernel timings per PR
-                with open("BENCH_kernels.json", "w") as f:
-                    json.dump({"full": args.full, "rows": rows}, f, indent=2)
-                print("# wrote BENCH_kernels.json", flush=True)
-            if name == "serving" and rows:
-                with open("BENCH_serving.json", "w") as f:
-                    json.dump({"full": args.full, "rows": rows}, f, indent=2)
-                print("# wrote BENCH_serving.json", flush=True)
-            if name == "collectives" and rows:
-                # the comm-perf trajectory artifact: ring vs psum bytes/us
-                # per wire + ZeRO-1 gather vs scatter collective term
-                with open("BENCH_collectives.json", "w") as f:
-                    json.dump({"full": args.full, "rows": rows}, f, indent=2)
-                print("# wrote BENCH_collectives.json", flush=True)
+            if name in bench_gate.BENCH_SUITES and rows:
+                # perf trajectory artifacts (merged, provenance-stamped)
+                path = bench_gate.write_bench(name, rows, full=args.full)
+                print(f"# wrote {path}", flush=True)
+                if args.gate:
+                    gate_results[name] = bench_gate.check_suite(
+                        name, rows, baselines.get(name))
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1
@@ -84,6 +107,12 @@ def main() -> None:
             roofline.main()
         except Exception as e:
             print(f"# roofline skipped: {e}", flush=True)
+
+    if args.gate and gate_results:
+        report = bench_gate.gate_report(gate_results)
+        print(report, flush=True)
+        if any(gate_results.values()):
+            failures += 1
 
     if failures:
         raise SystemExit(1)

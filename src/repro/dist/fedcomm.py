@@ -35,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import obs
 from repro.core.comm import wire_format, wire_qblock
 from repro.dist.sharding import _mesh_shape
 from repro.kernels.ring_allreduce import (fused_hop, _dequant_chunk,
@@ -51,6 +52,9 @@ def ring_enabled() -> bool:
 # a Python-unrolled hop schedule, so re-tracing it every round would pay
 # the full lowering cost 25x in a 25-round federation.  Bounded FIFO so a
 # sweep over meshes/configs can't pin executables for the process lifetime.
+# Each entry carries (compiled_fn, byte_ledger): the ledger fills at the
+# first trace and is bit-identical every subsequent round, so cache hits
+# can replay it into the repro.obs tracer without re-compiling.
 _AGG_CACHE: dict = {}
 _AGG_CACHE_MAX = 32
 
@@ -138,8 +142,17 @@ def ring_aggregate(member_adapters, weights, mesh, *, wire: str = None,
 
     key = (mesh, wire, qblock, tdef, n,
            tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
-    agg = _AGG_CACHE.get(key) if byte_ledger is None else None
+    agg = ledger = None
+    if byte_ledger is None:
+        cached = _AGG_CACHE.get(key)
+        if cached is not None:
+            agg, ledger = cached
     if agg is None:
+        # the ledger fills at trace time (first call below) and describes
+        # every round identically; cache it with the executable so obs
+        # telemetry keeps its per-hop numbers on the hot (cached) path
+        ledger = [] if byte_ledger is None else byte_ledger
+
         @jax.jit
         @functools.partial(shard_map, mesh=mesh,
                            in_specs=(member_spec, member_spec, st_spec),
@@ -152,7 +165,7 @@ def ring_aggregate(member_adapters, weights, mesh, *, wire: str = None,
             red, new_res = ring_allreduce(
                 flat, axes, shape, wire=wire, qblock=qblock,
                 residuals={ax: r[0] for ax, r in st.items()},
-                byte_ledger=byte_ledger)
+                byte_ledger=ledger)
             parts = jnp.split(red, splits)
             out = jax.tree.unflatten(
                 tdef, [p.reshape(s) for p, s in zip(parts, shapes)])
@@ -161,10 +174,32 @@ def ring_aggregate(member_adapters, weights, mesh, *, wire: str = None,
         if byte_ledger is None:
             if len(_AGG_CACHE) >= _AGG_CACHE_MAX:
                 _AGG_CACHE.pop(next(iter(_AGG_CACHE)))
-            _AGG_CACHE[key] = agg
+            _AGG_CACHE[key] = (agg, ledger)
 
-    out, st_out = agg(member_adapters, weights, st_in)
+    with obs.span("fedcomm.ring_aggregate", device=True, wire=wire,
+                  axes=",".join(axes)):
+        out, st_out = agg(member_adapters, weights, st_in)
+    _trace_ring_round(ledger, wire)
     return (out, st_out) if carry_state else out
+
+
+def _trace_ring_round(ledger, wire: str) -> None:
+    """Replay one round's measured ppermute ledger into the tracer: a
+    ``ring.hop`` instant per chunk transfer and a per-axis
+    ``ring.wire_bytes.<axis>`` counter.  The counter's per-round increment
+    equals ``repro.dist.fed.expected_collective_bytes`` / ``repro.core.comm
+    .collective_bytes_per_round`` for that axis EXACTLY (same plan, fourth
+    measurement) — ``tests/test_obs.py`` holds the line."""
+    if not ledger or not obs.enabled():
+        return
+    per_axis: dict = {}
+    for i, (ax, nbytes) in enumerate(ledger):
+        obs.instant("ring.hop", track=f"ring:{ax}", axis=ax, seq=i,
+                    nbytes=nbytes, wire=wire)
+        per_axis[ax] = per_axis.get(ax, 0) + nbytes
+    for ax, nbytes in per_axis.items():
+        obs.counter(f"ring.wire_bytes.{ax}", nbytes)
+    obs.counter("ring.rounds", 1)
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,13 @@ mode is the full quantized cache ever dequantized to HBM.  Sequence-sharded
 caches (``REPRO_CACHE_SHARD=seq``) go through ``repro.dist.decode``, which
 calls this entry point with ``return_partials=True`` per shard and combines
 the (m, l, acc) partials with a pmax/psum over the ``model`` axis.
+
+Observability: every dispatch wraps its body in a ``jax.named_scope``
+(``obs.flash_decode``, ``obs.qlora_matmul``, ...).  The scopes cost nothing
+at runtime (they only name the lowered HLO), but XLA device traces and
+``launch/hlo_cost`` dumps then carry the same region names as the host
+spans ``repro.obs`` records around the compiled calls, so profiler
+timelines line up across the host/device boundary.
 """
 
 from __future__ import annotations
@@ -58,16 +65,20 @@ def decode_mode() -> str:
 
 
 def qlora_matmul(x, w_nf4, absmax, lora_a, lora_b, lora_scale, **kw):
-    if use_kernels():
-        return _qlora(x, w_nf4, absmax, lora_a, lora_b, lora_scale,
-                      interpret=not on_tpu(), **kw)
-    return ref.qlora_matmul_ref(x, w_nf4, absmax, lora_a, lora_b, lora_scale)
+    with jax.named_scope("obs.qlora_matmul"):
+        if use_kernels():
+            return _qlora(x, w_nf4, absmax, lora_a, lora_b, lora_scale,
+                          interpret=not on_tpu(), **kw)
+        return ref.qlora_matmul_ref(x, w_nf4, absmax, lora_a, lora_b,
+                                    lora_scale)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, **kw):
-    if use_kernels():
-        return _flash(q, k, v, causal=causal, interpret=not on_tpu(), **kw)
-    return ref.flash_attention_ref(q, k, v, causal=causal)
+    with jax.named_scope("obs.flash_attention"):
+        if use_kernels():
+            return _flash(q, k, v, causal=causal, interpret=not on_tpu(),
+                          **kw)
+        return ref.flash_attention_ref(q, k, v, causal=causal)
 
 
 def _pallas_min_s() -> int:
@@ -84,18 +95,20 @@ def flash_decode(q, k, v, kv_pos, q_pos, **kw):
     caches shorter than REPRO_FLASH_DECODE_MIN_S take the XLA path (kernel
     launch not profitable); forced-interpret mode keeps the kernel so CI
     exercises it at test sizes."""
-    if use_kernels():
-        tbl = kw.get("block_tables")
-        s_logical = (tbl.shape[1] * k.shape[1] if tbl is not None
-                     else k.shape[1])
-        if on_tpu() and s_logical < _pallas_min_s():
-            return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)
-        return _flash_decode(q, k, v, kv_pos, q_pos,
-                             interpret=not on_tpu(), **kw)
-    return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)
+    with jax.named_scope("obs.flash_decode"):
+        if use_kernels():
+            tbl = kw.get("block_tables")
+            s_logical = (tbl.shape[1] * k.shape[1] if tbl is not None
+                         else k.shape[1])
+            if on_tpu() and s_logical < _pallas_min_s():
+                return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)
+            return _flash_decode(q, k, v, kv_pos, q_pos,
+                                 interpret=not on_tpu(), **kw)
+        return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-6, **kw):
-    if use_kernels():
-        return _rmsnorm(x, scale, eps=eps, interpret=not on_tpu(), **kw)
-    return ref.rmsnorm_ref(x, scale, eps)
+    with jax.named_scope("obs.rmsnorm"):
+        if use_kernels():
+            return _rmsnorm(x, scale, eps=eps, interpret=not on_tpu(), **kw)
+        return ref.rmsnorm_ref(x, scale, eps)

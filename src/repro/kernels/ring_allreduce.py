@@ -35,7 +35,12 @@ Chunk geometry and per-hop transfer sizes come from
 ``repro.core.comm.collective_bytes_per_round`` and ``repro.dist.fed
 .expected_collective_bytes``, and the optional ``byte_ledger`` argument
 records the actual nbytes of every ppermute'd buffer at trace time, so the
-Fig. 5 comm metric is one number measured three ways.
+Fig. 5 comm metric is one number measured three ways.  (A fourth way rides
+on top: ``repro.dist.fedcomm`` replays the captured ledger into the
+``repro.obs`` tracer as per-hop events + wire-byte counters every round,
+and each hop's ops are wrapped in a ``jax.named_scope``
+(``obs.ring.<axis>.d<dir>.rs_hop<h>``/``ag_hop<h>``) so XLA device traces
+name the hop schedule.)
 
 All collective entry points here must be called from inside a
 ``shard_map`` body where the axis names are bound (``repro.dist.fedcomm``
@@ -259,20 +264,21 @@ def _ring_one_axis(flat, axis: str, n: int, *, wire: str, qblock: int,
                 wire=wire, qblock=qblock)
             rsd = _set_chunk(rsd, s_idx(0), r_new, c)
         for h in range(n - 1):
-            _ledger_add(byte_ledger, axis, codes, scales)
-            codes = jax.lax.ppermute(codes, axis, perm)
-            if scales is not None:
-                scales = jax.lax.ppermute(scales, axis, perm)
-            r_idx = s_idx(h + 1)
-            if wire == "f32":
-                new_acc = _chunk(acc, r_idx, c) + codes
-                codes = new_acc
-            else:
-                new_acc, codes, scales, r_new = fused_hop(
-                    _chunk(acc, r_idx, c), codes, scales,
-                    _chunk(rsd, r_idx, c), wire=wire, qblock=qblock)
-                rsd = _set_chunk(rsd, r_idx, r_new, c)
-            acc = _set_chunk(acc, r_idx, new_acc, c)
+            with jax.named_scope(f"obs.ring.{axis}.d{d}.rs_hop{h}"):
+                _ledger_add(byte_ledger, axis, codes, scales)
+                codes = jax.lax.ppermute(codes, axis, perm)
+                if scales is not None:
+                    scales = jax.lax.ppermute(scales, axis, perm)
+                r_idx = s_idx(h + 1)
+                if wire == "f32":
+                    new_acc = _chunk(acc, r_idx, c) + codes
+                    codes = new_acc
+                else:
+                    new_acc, codes, scales, r_new = fused_hop(
+                        _chunk(acc, r_idx, c), codes, scales,
+                        _chunk(rsd, r_idx, c), wire=wire, qblock=qblock)
+                    rsd = _set_chunk(rsd, r_idx, r_new, c)
+                acc = _set_chunk(acc, r_idx, new_acc, c)
 
         # -- all-gather: quantized owned chunk forwarded verbatim --
         own = s_idx(n - 1)
@@ -282,16 +288,19 @@ def _ring_one_axis(flat, axis: str, n: int, *, wire: str, qblock: int,
         outd = jnp.zeros((n * c,), jnp.float32)
         outd = _set_chunk(outd, own, owned_val, c)
         for h in range(n - 1):
-            _ledger_add(byte_ledger, axis, codes, scales)
-            codes = jax.lax.ppermute(codes, axis, perm)
-            if scales is not None:
-                scales = jax.lax.ppermute(scales, axis, perm)
-            idx = s_idx(h)  # chunk owned by my (h+1)-away upstream neighbour
-            outd = _set_chunk(
-                outd, idx,
-                codes if wire == "f32"
-                else _dequant_chunk(codes, scales, wire=wire, qblock=qblock),
-                c)
+            with jax.named_scope(f"obs.ring.{axis}.d{d}.ag_hop{h}"):
+                _ledger_add(byte_ledger, axis, codes, scales)
+                codes = jax.lax.ppermute(codes, axis, perm)
+                if scales is not None:
+                    scales = jax.lax.ppermute(scales, axis, perm)
+                idx = s_idx(h)  # chunk owned by my (h+1)-away upstream
+                                # neighbour
+                outd = _set_chunk(
+                    outd, idx,
+                    codes if wire == "f32"
+                    else _dequant_chunk(codes, scales, wire=wire,
+                                        qblock=qblock),
+                    c)
         out = jax.lax.dynamic_update_slice_in_dim(out, outd, d * n * c, 0)
         res = jax.lax.dynamic_update_slice_in_dim(res, rsd, d * n * c, 0)
 

@@ -14,6 +14,10 @@ Engine (request-level continuous batching over the same compiled step):
 lengths; ``--requests FILE`` replays a JSON trace instead (a list of
 objects with ``prompt`` or ``prompt_len``, ``max_new_tokens``, and optional
 ``arrival_step`` / ``temperature`` / ``top_k`` / ``top_p`` / ``seed``).
+
+``--trace-out PATH`` dumps the run's ``repro.obs`` span timeline (request
+lifecycles, engine decode steps, pool-utilization counters) as Chrome
+trace-event JSON — open it at https://ui.perfetto.dev or chrome://tracing.
 """
 
 from __future__ import annotations
@@ -26,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ALL_ARCHS, get_config, get_smoke_config
 from repro.kernels import ops
 from repro.launch.steps import make_serve_step
@@ -205,6 +210,9 @@ def main() -> None:
                     help="physical blocks in the paged pool (0 = full "
                          "capacity slots*blocks_per_slot; less "
                          "oversubscribes lanes against real footprints)")
+    ap.add_argument("--trace-out", default="",
+                    help="write the repro.obs span timeline as Chrome "
+                         "trace-event JSON (Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -231,6 +239,12 @@ def main() -> None:
     else:
         run_fixed_batch(cfg, params, api, batch=args.batch,
                         prompt_len=args.prompt_len, gen=args.gen)
+
+    if args.trace_out:
+        from repro.obs import bench_gate
+        path = obs.dump(args.trace_out, provenance=bench_gate.provenance())
+        print(f"trace: wrote {path} "
+              f"(open at https://ui.perfetto.dev or chrome://tracing)")
 
 
 if __name__ == "__main__":

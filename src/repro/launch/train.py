@@ -6,6 +6,10 @@
 On this CPU host it runs the reduced (smoke) configs by default; on a real
 TPU slice drop --smoke and point --mesh at the production topology (the
 same step functions the dry-run lowers are used verbatim).
+
+``--trace-out PATH`` dumps the ``repro.obs`` timeline (per-step
+``train.step`` spans via ``jax.profiler.StepTraceAnnotation``, loss gauge)
+as Chrome trace-event JSON for Perfetto / chrome://tracing.
 """
 
 from __future__ import annotations
@@ -17,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs import ALL_ARCHS, get_config, get_smoke_config
 from repro.core.lora import FAMILY_TARGETS, attach_lora
 from repro.data.tokens import lm_batches, markov_tokens
@@ -52,6 +57,9 @@ def main() -> None:
     ap.add_argument("--fed", action="store_true",
                     help="LoRA-federated step (the paper's training mode)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--trace-out", default="",
+                    help="write the repro.obs span timeline as Chrome "
+                         "trace-event JSON (Perfetto / chrome://tracing)")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -78,14 +86,23 @@ def main() -> None:
         t0 = time.time()
         for i in range(args.steps):
             batch = synth_batch(cfg, args.batch, args.seq, it)
-            params, opt, loss = jitted(params, opt, batch,
-                                       jnp.asarray(i, jnp.int32))
+            with obs.step_span("train.step", i, batch=args.batch,
+                               seq=args.seq):
+                params, opt, loss = jitted(params, opt, batch,
+                                           jnp.asarray(i, jnp.int32))
+                loss = float(loss)      # device sync inside the span
+            obs.gauge("train.loss", loss)
             if i < 3 or (i + 1) % 5 == 0:
                 dt = time.time() - t0
                 tok_s = args.batch * args.seq * (i + 1) / dt
-                print(f"step {i + 1}/{args.steps} loss={float(loss):.4f} "
+                print(f"step {i + 1}/{args.steps} loss={loss:.4f} "
                       f"({tok_s:.0f} tok/s)", flush=True)
     print("done")
+    if args.trace_out:
+        from repro.obs import bench_gate
+        path = obs.dump(args.trace_out, provenance=bench_gate.provenance())
+        print(f"trace: wrote {path} "
+              f"(open at https://ui.perfetto.dev or chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,30 @@
+"""``repro.obs`` — the unified observability layer.
+
+One process-global structured tracer (``repro.obs.trace``) threads through
+the serving engine, the federated trainer, and the launchers; bench
+provenance + regression gates live in ``repro.obs.bench_gate``.  Import
+this package, not the submodules, from instrumented code::
+
+    from repro import obs
+
+    with obs.span("engine.decode_step", device=True, step=i):
+        ...
+    obs.counter("ring.wire_bytes.data", nbytes)
+    obs.dump("trace.json")        # -> chrome://tracing / Perfetto UI
+
+``REPRO_TRACE=0`` turns every call into a no-op; ``REPRO_TRACE_OUT=f.json``
+dumps the trace at exit.
+"""
+
+from repro.obs.trace import (Histogram, Tracer, add_span, counter,
+                             counter_track, dump, gauge, get_tracer, hist,
+                             instant, reset, span, span_count, step_span,
+                             trace_enabled)
+
+enabled = trace_enabled
+
+__all__ = [
+    "Histogram", "Tracer", "add_span", "counter", "counter_track", "dump",
+    "enabled", "gauge", "get_tracer", "hist", "instant", "reset", "span",
+    "span_count", "step_span", "trace_enabled",
+]

@@ -31,6 +31,17 @@ axis, paged pools the block axis, with the same pmax/psum combine).
     engine = ForecastEngine(cfg, params, num_slots=8, cache_len=256)
     engine.submit(Request(id="r0", prompt=toks, max_new_tokens=32))
     done = engine.run()              # {id: FinishedRequest}
+
+Observability (``repro.obs``, ``REPRO_TRACE=0`` disables): every request
+gets its own Perfetto track carrying the lifecycle
+``req.submit -> req.queued -> req.prefill -> req.first_token ->
+req.decode -> req.lifecycle -> req.retire`` (park/evict as instant
+events); each engine tick emits an ``engine.decode_step`` span (wrapped in
+``jax.profiler.TraceAnnotation`` so host and XLA device traces line up)
+plus a ``pool`` counter track (blocks in use / active lanes).  Exactly one
+``req.lifecycle`` span is emitted per FINISHED request — eviction and
+recompute re-emit the per-residency phases, never the lifecycle — so a
+trace's lifecycle-span count always equals ``requests_finished``.
 """
 
 from __future__ import annotations
@@ -43,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.launch.steps import make_serve_step
 from repro.models.registry import get_model
@@ -168,6 +180,10 @@ class ForecastEngine:
                 raise ValueError(
                     f"request {request.id}: needs {need} blocks, pool has "
                     f"{self.pool.pool_blocks}")
+        if request.resume is None:            # eviction re-queues internally
+            obs.instant("req.submit", track=f"req:{request.id}",
+                        id=request.id, prompt_len=request.prompt_len,
+                        max_new_tokens=request.max_new_tokens)
         self._submit_time[request.id] = time.perf_counter()
         self.scheduler.submit(request)
 
@@ -226,6 +242,11 @@ class ForecastEngine:
         return self.pool.blocks_for(self._bucketed_len(req))
 
     def _admit(self, req: Request) -> None:
+        track = f"req:{req.id}"
+        t_admit = time.perf_counter()
+        obs.add_span("req.queued",
+                     self._submit_time.get(req.id, t_admit), t_admit,
+                     track=track, id=req.id)
         slot = self.pool.acquire()
         P = req.prompt_len
         Pb = self._bucketed_len(req)
@@ -239,9 +260,12 @@ class ForecastEngine:
         true_len = (jnp.asarray([P], jnp.int32)
                     if self.prefill_bucket and (Pb != P or not req.resume)
                     else None)
-        cache1, logits = self._prefill_fn(self.params, jnp.asarray(toks),
-                                          true_len)
-        self.pool.insert(cache1, slot)
+        with obs.span("req.prefill", device=True, track=track, id=req.id,
+                      prompt_len=P, padded_len=Pb, slot=slot,
+                      resumed=req.resume is not None):
+            cache1, logits = self._prefill_fn(self.params,
+                                              jnp.asarray(toks), true_len)
+            self.pool.insert(cache1, slot)
 
         res = req.resume or {}
         prior: List[int] = list(res.get("generated", []))
@@ -262,7 +286,10 @@ class ForecastEngine:
                       admitted_step=self.step_count, admitted_time=now)
         self.metrics.record_admit(P)
         done = st.remaining == 1 or tok0 == req.eos_id
+        first_of_original = not prior          # st.emit appends into `prior`
         st.emit(tok0, is_last=done, now=now)
+        if first_of_original:
+            obs.instant("req.first_token", track=track, id=req.id)
         if done:
             self._retire(st, "eos" if tok0 == req.eos_id else "length")
             return
@@ -302,6 +329,9 @@ class ForecastEngine:
                 except RuntimeError:          # pool exhausted — park
                     if self._pos[i] >= 0:
                         self.metrics.record_park()
+                        obs.instant("req.park", track=f"req:{st.request.id}",
+                                    id=st.request.id, slot=i,
+                                    free_blocks=self.pool.free_blocks)
                     self._pos[i] = -1
                     parked.append(i)
             self.pool.reset_blocks(fresh)
@@ -347,6 +377,8 @@ class ForecastEngine:
         self._tok[slot, 0] = 0
         self.pool.release(slot)
         self.metrics.record_evict()
+        obs.instant("req.evict", track=f"req:{req.id}", id=req.id,
+                    slot=slot, generated=len(done))
         self.scheduler.requeue_front([resumed])
 
     # -- decode / retire -----------------------------------------------------
@@ -369,13 +401,17 @@ class ForecastEngine:
             batch["block_tbl"] = jnp.asarray(self.pool.table)
             batch["ring_len"] = jnp.asarray(self.pool.ring_len, jnp.int32)
         t0 = time.perf_counter()
-        tok, self.pool.cache = self._step_fn(self.params, self.pool.cache,
-                                             batch)
-        tok_np = np.asarray(tok)              # blocks until the step lands
+        with obs.span("engine.decode_step", device=True,
+                      step=self.step_count, active=len(active)):
+            tok, self.pool.cache = self._step_fn(self.params,
+                                                 self.pool.cache, batch)
+            tok_np = np.asarray(tok)          # blocks until the step lands
         self.metrics.record_decode_step(
             len(active), len(active), time.perf_counter() - t0,
             in_flight=self.active_requests,
             blocks_in_use=self.pool.blocks_in_use)
+        obs.counter_track("pool", blocks_in_use=self.pool.blocks_in_use,
+                          active_lanes=len(active))
         now = time.perf_counter()
         for i in active:
             st = self.slots[i]
@@ -406,9 +442,21 @@ class ForecastEngine:
         self.pool.release(slot)
         res = st.request.resume or {}
         first_tok = res.get("first_token_time") or st.first_token_time
-        ttft = first_tok - self._submit_time.get(
-            st.request.id, st.admitted_time)
+        submit_t = self._submit_time.get(st.request.id, st.admitted_time)
+        ttft = first_tok - submit_t
         self.metrics.record_finish(ttft)
+        now = time.perf_counter()
+        track = f"req:{st.request.id}"
+        obs.add_span("req.decode", first_tok, now, track=track,
+                     id=st.request.id, tokens=len(st.generated))
+        # exactly ONE lifecycle span per finished request (never re-emitted
+        # on eviction/recompute): trace-validity checks count these against
+        # metrics.requests_finished
+        obs.add_span("req.lifecycle", submit_t, now, track=track,
+                     id=st.request.id, reason=reason,
+                     tokens=len(st.generated), ttft_s=ttft)
+        obs.instant("req.retire", track=track, id=st.request.id,
+                    reason=reason)
         self.finished[st.request.id] = FinishedRequest(
             id=st.request.id,
             tokens=np.asarray(st.generated, np.int32),

@@ -1,8 +1,47 @@
-"""Serving metrics: throughput, time-to-first-token, slot occupancy.
+"""Serving metrics: throughput, latency percentiles, slot/block occupancy.
 
 Host-side counters only — nothing here enters jit.  The engine calls the
 record hooks; ``summary()`` folds them into the dict that
 ``benchmarks/serving_bench.py`` persists to ``BENCH_serving.json``.
+
+Latency is reported as distributions, not just means: TTFT (submit ->
+first token, one sample per finished request) and inter-token latency
+(wall time of one batched decode step — every active request receives its
+next token at the step boundary, so the step time IS each stream's
+per-token latency) both feed ``repro.obs.Histogram`` reservoirs, and
+``summary()`` exposes p50/p95/p99 for each.
+
+Wall-clock accounting: ``wall_s`` spans from construction (or reset) to
+the **last recorded event** — decode steps and retires both advance the
+clock, so work after the final request finish (or a run where nothing
+finishes at all) is priced into ``tok_per_s`` instead of silently
+dropped.  ``steady_tok_per_s`` excludes the jit-compile-laden first decode
+step: the steady token count is the total scaled by (steps−1)/steps, and
+a run with a single decode step has no steady-state to report (0.0).
+
+Summary fields
+==============
+``requests``              finished request count
+``decode_steps``          batched decode steps executed
+``decode_tokens``         tokens sampled across decode steps
+``prefill_tokens``        real (unpadded) prompt tokens prefilled
+``wall_s``                construction -> last recorded event
+``tok_per_s``             decode_tokens / wall_s
+``steady_tok_per_s``      decode rate excluding the first (compile) step
+``mean_ttft_s``           mean submit -> first-token latency
+``max_ttft_s``            worst TTFT
+``ttft_p50/p95/p99_s``    TTFT percentiles (reservoir; exact below 4096
+                          requests)
+``itl_p50/p95/p99_s``     inter-token latency percentiles over decode
+                          steps
+``mean_occupancy``        mean active-lanes / num_slots per step
+``mean_block_utilization``mean used-blocks / pool_blocks per step (the
+                          paged pool's HBM win shows up here — lanes can
+                          sit near-full while blocks do not)
+``pool_blocks``           physical cache blocks (paged; lanes otherwise)
+``peak_in_flight``        max resident requests observed
+``parked_events``         block-grant failures (paged)
+``evictions``             livelock-breaking evictions
 """
 
 from __future__ import annotations
@@ -11,6 +50,8 @@ import dataclasses
 import time
 from typing import Dict, List
 
+from repro.obs import Histogram
+
 
 @dataclasses.dataclass
 class EngineMetrics:
@@ -18,7 +59,7 @@ class EngineMetrics:
     pool_blocks: int = 0                      # physical cache blocks (paged:
                                               # real blocks; lanes otherwise)
     started: float = dataclasses.field(default_factory=time.perf_counter)
-    finished_at: float = 0.0
+    last_event_at: float = 0.0                # latest decode step OR finish
     decode_steps: int = 0
     decode_tokens: int = 0                    # tokens sampled in decode steps
     prefill_tokens: int = 0                   # real (unpadded) prompt tokens
@@ -30,6 +71,8 @@ class EngineMetrics:
     parked_events: int = 0                    # block-grant failures (paged)
     evictions: int = 0                        # livelock-breaking evictions
     ttft_s: List[float] = dataclasses.field(default_factory=list)
+    ttft_hist: Histogram = dataclasses.field(default_factory=Histogram)
+    itl_hist: Histogram = dataclasses.field(default_factory=Histogram)
     first_step_s: float = 0.0                 # jit-compile-laden first step
     steady_decode_s: float = 0.0              # decode wall time past step 1
 
@@ -40,15 +83,21 @@ class EngineMetrics:
     def record_decode_step(self, active: int, tokens_out: int,
                            elapsed_s: float, *, in_flight: int = 0,
                            blocks_in_use: int = 0) -> None:
+        """One batched decode step: ``active`` lanes produced
+        ``tokens_out`` tokens in ``elapsed_s`` wall seconds."""
         if self.decode_steps == 0:
             self.first_step_s = elapsed_s
         else:
             self.steady_decode_s += elapsed_s
+            # the first step's latency is dominated by jit compilation —
+            # recording it would poison the p99 of every short run
+            self.itl_hist.add(elapsed_s)
         self.decode_steps += 1
         self.decode_tokens += tokens_out
         self.occupancy_sum += active / max(self.num_slots, 1)
         self.block_util_sum += blocks_in_use / max(self.pool_blocks, 1)
         self.peak_in_flight = max(self.peak_in_flight, in_flight or active)
+        self.last_event_at = time.perf_counter()
 
     def record_park(self) -> None:
         self.parked_events += 1
@@ -59,11 +108,25 @@ class EngineMetrics:
     def record_finish(self, ttft_s: float) -> None:
         self.requests_finished += 1
         self.ttft_s.append(ttft_s)
-        self.finished_at = time.perf_counter()
+        self.ttft_hist.add(ttft_s)
+        self.last_event_at = time.perf_counter()
 
     def summary(self) -> Dict[str, float]:
-        span = (self.finished_at or time.perf_counter()) - self.started
-        steady_steps = max(self.decode_steps - 1, 1)
+        # span to the LAST recorded event, not the last request finish:
+        # decode steps after the final finish (and runs where no request
+        # ever finishes) must still be priced into tok_per_s.  With no
+        # events at all, fall back to "now".
+        span = (self.last_event_at or time.perf_counter()) - self.started
+        # steady-state excludes the compile-laden first step; with a single
+        # decode step there is no steady state (the old (steps-1)/steps
+        # scaling degenerated at decode_steps == 1)
+        if self.decode_steps > 1 and self.steady_decode_s > 0:
+            steady_tokens = (self.decode_tokens *
+                             (self.decode_steps - 1) / self.decode_steps)
+            steady = steady_tokens / self.steady_decode_s
+        else:
+            steady = 0.0
+        th, ih = self.ttft_hist, self.itl_hist
         return {
             "requests": self.requests_finished,
             "decode_steps": self.decode_steps,
@@ -71,13 +134,16 @@ class EngineMetrics:
             "prefill_tokens": self.prefill_tokens,
             "wall_s": span,
             "tok_per_s": self.decode_tokens / span if span > 0 else 0.0,
-            # steady-state decode rate: excludes the jit-compile first step
-            "steady_tok_per_s": (
-                self.decode_tokens * (steady_steps / max(self.decode_steps, 1))
-                / self.steady_decode_s if self.steady_decode_s > 0 else 0.0),
+            "steady_tok_per_s": steady,
             "mean_ttft_s": (sum(self.ttft_s) / len(self.ttft_s)
                             if self.ttft_s else 0.0),
             "max_ttft_s": max(self.ttft_s) if self.ttft_s else 0.0,
+            "ttft_p50_s": th.percentile(50),
+            "ttft_p95_s": th.percentile(95),
+            "ttft_p99_s": th.percentile(99),
+            "itl_p50_s": ih.percentile(50),
+            "itl_p95_s": ih.percentile(95),
+            "itl_p99_s": ih.percentile(99),
             "mean_occupancy": (self.occupancy_sum / self.decode_steps
                                if self.decode_steps else 0.0),
             # block-level utilization: the paged pool's win shows up here —

@@ -22,6 +22,7 @@ import dataclasses
 from collections import deque
 from typing import Callable, Deque, List, Optional
 
+from repro import obs
 from repro.serve.request import Request
 
 
@@ -55,6 +56,8 @@ class FIFOScheduler:
         """Push evicted/unplaceable requests back at the head (order
         preserved) — they stay first in line, FIFO fairness intact."""
         for r in reversed(requests):
+            obs.instant("sched.requeue", track=f"req:{r.id}", id=r.id,
+                        queue_depth=len(self._queue))
             self._queue.appendleft(r)
 
     def __len__(self) -> int:

@@ -17,6 +17,17 @@ aggregates exactly what the wire delivers, the residual is carried
 per-client between rounds (quantization noise does not bias the paper's
 aggregation), and ``comm.fedtime_round(..., wire=...)`` prices what was
 actually sent.  The default f32 wire is the identity.
+
+Per-round telemetry (``repro.obs``, ``REPRO_TRACE=0`` disables): each
+(round, cluster) gets a ``fed.round`` span wrapping per-client
+``fed.client_fit`` spans on a per-cluster Perfetto track; the quantized
+wire's EF residual norm lands in per-client gauges + a
+``fed.ef_residual_norm`` histogram (drift of carried quantization error),
+the round-over-round aggregated-adapter movement in per-cluster
+``fed.adapter_delta_norm.cluster<c>`` gauges + counter tracks (the
+convergence signal heterogeneous-client work diagnoses stragglers
+against), and the metered comm in ``fed.wire_bytes`` /
+``fed.round_loss.cluster<c>``.
 """
 
 from __future__ import annotations
@@ -29,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core import comm, dpo, fedtime
 from repro.core.client import local_update
@@ -132,13 +144,22 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                     alive = sel[:1]               # quorum of one
             else:
                 alive = sel
+            round_span = obs.span("fed.round", track=f"fed:cluster{c}",
+                                  round=r, cluster=c, clients=len(alive),
+                                  stragglers=int(take - len(alive)),
+                                  wire=wire)
+            round_span.__enter__()
             updates, losses, ws = [], [], []
             for s in alive:
                 x, y = client_data[s]
                 batches = _stack_batches(x, y, ft.local_steps, batch_size,
                                          seed=1000 * r + int(s))
-                ad, l = local_update(loss_fn, params, servers[c].adapters,
-                                     batches, steps=ft.local_steps)
+                with obs.span("fed.client_fit", track=f"fed:cluster{c}",
+                              client=int(s), cluster=c, round=r,
+                              steps=ft.local_steps):
+                    ad, l = local_update(loss_fn, params,
+                                         servers[c].adapters,
+                                         batches, steps=ft.local_steps)
                 if wire != "f32":
                     # the upload is the adapter DELTA through the wire:
                     # encode (+ carried residual), and hand the server the
@@ -151,6 +172,14 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                     ad = jax.tree.map(
                         lambda g, d: g.astype(jnp.float32) + d,
                         servers[c].adapters, dq)
+                    if obs.enabled():
+                        # carried EF residual norm: the quantization error
+                        # this client drags into its next round
+                        ef = float(jnp.linalg.norm(
+                            wire_residuals[int(s)]))
+                        obs.gauge(f"fed.ef_residual_norm.client{int(s)}",
+                                  ef)
+                        obs.hist("fed.ef_residual_norm", ef)
                 updates.append(ad)
                 losses.append(float(l))
                 ws.append(weights_all[s])
@@ -170,11 +199,33 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                     for i, u in enumerate(updates)]
                 ws = np.ones(n_alive, np.float32)
             take = len(alive)
-            servers[c].aggregate(updates, np.asarray(ws))
+            prev_adapters = servers[c].adapters if obs.enabled() else None
+            with obs.span("fed.aggregate", track=f"fed:cluster{c}",
+                          round=r, cluster=c, clients=take,
+                          secure=secure_aggregation):
+                servers[c].aggregate(updates, np.asarray(ws))
             stats = comm.fedtime_round(
                 params, clients_per_round=take,
                 num_clusters=ft.num_clusters, wire=wire)
-            logs.append(RoundLog(r, c, float(np.mean(losses)), stats))
+            loss_r = float(np.mean(losses))
+            logs.append(RoundLog(r, c, loss_r, stats))
+            if obs.enabled():
+                # round-over-round adapter movement: ||agg_t - agg_{t-1}||
+                # per cluster — flat-lining under a quantized wire with no
+                # EF state is the classic correlated-bias symptom
+                dn = float(jnp.sqrt(sum(
+                    jnp.sum((a.astype(jnp.float32) -
+                             b.astype(jnp.float32)) ** 2)
+                    for a, b in zip(jax.tree.leaves(servers[c].adapters),
+                                    jax.tree.leaves(prev_adapters)))))
+                obs.gauge(f"fed.adapter_delta_norm.cluster{c}", dn)
+                obs.hist("fed.adapter_delta_norm", dn)
+                obs.gauge(f"fed.round_loss.cluster{c}", loss_r)
+                obs.counter("fed.wire_bytes",
+                            stats.bytes_up + stats.bytes_down)
+                obs.counter_track(f"fed.cluster{c}", delta_norm=dn,
+                                  loss=loss_r)
+            round_span.__exit__(None, None, None)
             if progress:
                 progress(f"round {r} cluster {c}: "
                          f"loss={np.mean(losses):.4f} "

@@ -1,0 +1,131 @@
+"""repro.obs.bench_gate: the regression gate must PASS on the committed
+BENCH_*.json and demonstrably FAIL on perturbed baselines; row merge keeps
+partial reruns from clobbering history; provenance stamps are complete."""
+
+import copy
+import json
+import os
+
+import pytest
+
+from repro.obs import bench_gate
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _committed(suite):
+    rows = bench_gate.load_bench(suite, root=_ROOT)
+    if rows is None:
+        pytest.skip(f"no committed BENCH_{suite}.json")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# gates vs the committed baselines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("suite", bench_gate.BENCH_SUITES)
+def test_gate_passes_on_committed_bench(suite):
+    """Self-comparison of the committed file must be clean: every gated
+    metric exists and satisfies its absolute bound."""
+    rows = _committed(suite)
+    assert bench_gate.check_suite(suite, rows, rows) == []
+
+
+def test_gate_fails_on_regressed_wallclock_ratio():
+    """A 10x-better baseline makes the committed kernels rows look like a
+    regression — the relative-tolerance arm must trip."""
+    rows = _committed("kernels")
+    base = copy.deepcopy(rows)
+    for r in base:
+        if r.get("name") == "flash_decode_4k":
+            r["speedup"] *= 10
+    fails = bench_gate.check_suite("kernels", rows, base)
+    assert any("flash_decode_4k" in f and "regressed" in f for f in fails)
+
+
+def test_gate_fails_on_absolute_bound():
+    """Bounds hold with NO baseline at all: an int8 wire fraction above the
+    0.27 ceiling fails even on a first run."""
+    rows = copy.deepcopy(_committed("collectives"))
+    for r in rows:
+        if r.get("case") == "ring" and r.get("wire") == "int8":
+            r["bytes_vs_f32_psum"] = 0.5
+    fails = bench_gate.check_suite("collectives", rows, None)
+    assert any("ceiling" in f for f in fails)
+
+
+def test_gate_exact_metrics_trip_on_any_change():
+    rows = _committed("serving")
+    cur = copy.deepcopy(rows)
+    for r in cur:
+        if r.get("name") == "serving_engine_vs_sequential":
+            r["greedy_mismatches"] = 1
+    fails = bench_gate.check_suite("serving", cur, rows)
+    assert any("greedy_mismatches" in f for f in fails)
+
+
+def test_gate_reports_missing_metric():
+    fails = bench_gate.check_suite("kernels", [], None)
+    assert fails and all("missing" in f for f in fails)
+    report = bench_gate.gate_report({"kernels": fails, "serving": []})
+    assert "GATE kernels: FAIL" in report and "GATE serving: ok" in report
+
+
+def test_gate_direction_validation():
+    spec = bench_gate.GateSpec({"name": "x"}, "v", "sideways")
+    bench_gate.GATES["kernels"].append(spec)
+    try:
+        with pytest.raises(ValueError):
+            bench_gate.check_suite("kernels", [{"name": "x", "v": 1}], None)
+    finally:
+        bench_gate.GATES["kernels"].remove(spec)
+
+
+# ---------------------------------------------------------------------------
+# merge + write
+# ---------------------------------------------------------------------------
+
+def test_merge_rows_replaces_in_place_and_appends():
+    old = [{"row": "kernel", "name": "a", "v": 1},
+           {"row": "kernel", "name": "b", "v": 2}]
+    new = [{"row": "kernel", "name": "a", "v": 10},
+           {"row": "kernel", "name": "c", "v": 3}]
+    merged = bench_gate.merge_rows(old, new)
+    assert [r["name"] for r in merged] == ["a", "b", "c"]  # stable order
+    assert merged[0]["v"] == 10                            # refreshed
+    assert merged[1]["v"] == 2                             # survived
+
+
+def test_write_bench_merges_into_existing_file(tmp_path):
+    root = str(tmp_path)
+    bench_gate.write_bench("kernels", [{"name": "a", "v": 1},
+                                       {"name": "b", "v": 2}],
+                           full=False, root=root)
+    # a partial rerun (--only) must NOT clobber row b
+    path = bench_gate.write_bench("kernels", [{"name": "a", "v": 5}],
+                                  full=False, root=root)
+    doc = json.load(open(path))
+    by_name = {r["name"]: r for r in doc["rows"]}
+    assert by_name["a"]["v"] == 5 and by_name["b"]["v"] == 2
+    assert doc["provenance"]["git_sha"]
+    assert "env" in doc["provenance"]
+
+
+def test_write_bench_survives_corrupt_file(tmp_path):
+    root = str(tmp_path)
+    with open(bench_gate.bench_path("serving", root), "w") as f:
+        f.write("{not json")
+    path = bench_gate.write_bench("serving", [{"name": "a", "v": 1}],
+                                  full=True, root=root)
+    doc = json.load(open(path))
+    assert doc["rows"] == [{"name": "a", "v": 1}] and doc["full"] is True
+
+
+def test_provenance_has_toolchain_fields():
+    p = bench_gate.provenance()
+    for k in ("git_sha", "jax", "jaxlib", "backend", "device_kind",
+              "python", "platform", "timestamp", "env"):
+        assert k in p, k
+    assert isinstance(p["env"], dict)
+    assert p["jax"] != "unknown"               # jax is installed here

@@ -15,6 +15,16 @@ footprint, so the same bytes hold strictly more requests in flight — the
 row reports the peak-concurrency and aggregate-tok/s ratios, and asserts
 the two engines' greedy outputs are bit-identical.
 
+Row 3 — shared-prefix pool vs non-shared paged pool at EQUAL pool bytes: a
+cluster-skewed trace (per cluster: one donor prompt, several identical
+replays, one divergent-tail member — federated clients replaying a common
+context window) through the same paged geometry twice, once with
+copy-on-write prefix sharing + the host swap tier and once without.
+Full-prompt chain hits admit at zero block cost and skip their prefill
+entirely, so the shared pool sustains a multiple of the baseline's peak
+concurrency; the row records the ratio plus share/CoW/swap counters and
+asserts greedy outputs are bit-identical between the two engines.
+
 Rows land in BENCH_serving.json via benchmarks/run.py.
 """
 
@@ -147,6 +157,94 @@ def _paged_vs_contiguous_case(full: bool):
     return row
 
 
+def _cluster_skew_case(full: bool):
+    """Cluster-skewed trace, equal pool bytes: CoW prefix sharing + swap
+    tier vs the plain paged pool.  Per cluster one donor pays the prefill;
+    identical replays full-hit the chain (0 blocks, 0 prefill) and
+    divergent tails pay only their private blocks."""
+    from repro.configs import get_smoke_config
+    from repro.models.registry import get_model
+    from repro.serve import Request
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(2))
+
+    cache_len, block = 48, 8
+    n_clusters = 3
+    n_dups = 4 if full else 2                 # identical replays per cluster
+    gen = 12 if full else 8
+    # core fills 3 blocks with the last only partial: a full-hit replay's
+    # first own token lands IN a shared block -> copy-on-write fires
+    core_len, tail_len = 22, 6
+    slots = n_clusters * (n_dups + 2)         # every request could reside
+    pool_blocks = 18                          # << slots * 6 blocks/lane
+    rng = np.random.default_rng(7)
+    cores = [rng.integers(0, cfg.vocab_size, core_len).astype(np.int32)
+             for _ in range(n_clusters)]
+    reqs = []                                 # (id, prompt, arrival)
+    for c in range(n_clusters):
+        reqs.append((f"c{c}d", cores[c], c))  # donors admit first
+        # divergent tails queue BEFORE the replays: they pay real blocks,
+        # so the non-shared baseline stalls on them while the shared pool
+        # admits them at tail-only cost and the replays behind them free
+        reqs.append((f"c{c}t", np.concatenate(
+            [cores[c], rng.integers(0, cfg.vocab_size, tail_len)
+             .astype(np.int32)]), n_clusters))
+        for u in range(n_dups):
+            reqs.append((f"c{c}u{u}", cores[c], n_clusters + 1 + u))
+
+    def run_one(shared: bool):
+        eng, offset = _warmed_engine(
+            cfg, params, [core_len, core_len + tail_len], cores[0].tolist(),
+            slots=slots, cache_len=cache_len, paged=True, block_size=block,
+            pool_blocks=pool_blocks, share_prefixes=shared,
+            swap_tier=shared)
+        for rid, prompt, arr in reqs:
+            eng.submit(Request(id=rid, prompt=prompt, max_new_tokens=gen,
+                               arrival_step=arr + offset))
+        t0 = time.perf_counter()
+        done = eng.run(max_steps=2000)
+        wall = time.perf_counter() - t0
+        toks = sum(len(f.tokens) for f in done.values())
+        return eng, done, toks / wall
+
+    eng_b, done_b, tps_b = run_one(shared=False)
+    eng_s, done_s, tps_s = run_one(shared=True)
+    mismatches = sum(done_s[rid].tokens.tolist() !=
+                     done_b[rid].tokens.tolist() for rid, _, _ in reqs)
+    sb, ss = eng_b.metrics.summary(), eng_s.metrics.summary()
+    row = {
+        "name": "serving_shared_prefix",
+        "requests": len(reqs),
+        "clusters": n_clusters,
+        "gen": gen,
+        "cache_len": cache_len,
+        "block_size": block,
+        "pool_blocks": pool_blocks,
+        "slots": slots,
+        "peak_in_flight_baseline": sb["peak_in_flight"],
+        "peak_in_flight_shared": ss["peak_in_flight"],
+        "concurrency_ratio": round(ss["peak_in_flight"]
+                                   / max(sb["peak_in_flight"], 1), 2),
+        "prefill_tokens_baseline": sb["prefill_tokens"],
+        "prefill_tokens_shared": ss["prefill_tokens"],
+        "tok_per_s_baseline": round(tps_b, 2),
+        "tok_per_s_shared": round(tps_s, 2),
+        "share_hits": ss["share_hits"],
+        "full_prompt_hits": ss["full_prompt_hits"],
+        "shared_blocks": ss["shared_blocks"],
+        "cow_copies": ss["cow_copies"],
+        "swap_outs": ss["swap_outs"],
+        "swap_ins": ss["swap_ins"],
+        "evictions_shared": ss["evictions"],
+        "greedy_mismatches": mismatches,
+        "serve_step_signatures": eng_s.num_step_signatures(),
+    }
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    return row
+
+
 def run(full: bool = False):
     from repro.configs import get_smoke_config
     from repro.launch.serve import make_trace
@@ -214,7 +312,7 @@ def run(full: bool = False):
         "greedy_mismatches": mismatches,
     }
     print(",".join(f"{k}={v}" for k, v in row.items()))
-    return [row, _paged_vs_contiguous_case(full)]
+    return [row, _paged_vs_contiguous_case(full), _cluster_skew_case(full)]
 
 
 if __name__ == "__main__":

@@ -33,6 +33,14 @@ localized per shard — entries outside the stripe become -1, i.e. masked —
 and the identical (m, l, acc) combine stitches the stripes back together.
 A request's blocks land on whichever shards the allocator picked; the
 combine is oblivious to that placement exactly as it is to lane liveness.
+
+Copy-on-write prefix sharing composes for free: a shared physical block
+appears at the SAME logical index in every sharer's table row, so each
+row's entry localizes to the same shard-local index (or -1 off-stripe) —
+every sharer attends to the one stored tile, no matter which shard owns
+it.  Localization is per-entry and read-only; it never assumes a block
+appears in at most one row (tests/test_paged_pool.py drives a duplicated
+physical block across rows through the sharded path).
 """
 
 from __future__ import annotations

@@ -30,9 +30,18 @@ Two cache layouts share the kernel body:
     scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``): the BlockSpec
     index_map dereferences it, so each program DMAs exactly the tile the
     table names — the pool is never gathered in HBM.  Ungranted entries
-    stream pool block 0 and are masked wholesale in-kernel.  On real TPUs
+    stream pool block 0 and are masked wholesale in-kernel.  Tables are
+    READ-ONLY to the kernel, so one physical block may appear in many
+    tables at once (copy-on-write prefix sharing): every sharer streams the
+    same tile, and slots a sharer hasn't logically reached are excluded by
+    the causal/ring masks, not by table bookkeeping.  On real TPUs
     ``block_size`` should be a multiple of the 128-lane tile; the serving
     smoke configs use smaller blocks under interpret mode.
+
+``paged_block_copy`` is the pool's copy-on-write data move: one physical
+block's tile duplicated to another block across all layers of a
+layer-stacked pool leaf, with the src/dst pair riding scalar prefetch so
+the copy is a pure per-layer DMA (no gather of the pool).
 
 Block policy (``block_kv``/``n_splits`` <= 0 selects it): tile and split
 counts are derived from the cache length instead of fixed defaults —
@@ -423,6 +432,42 @@ def _flash_decode_paged(q, k, v, kv_pos, block_tables, q_pos, *, k_scale,
         interpret=interpret,
     )(tbl, *args)
     return _finish(m, l, acc, G, q, return_partials)
+
+
+def paged_block_copy(leaf, src, dst, *, interpret: bool = False):
+    """Copy physical block ``src``'s tile to block ``dst`` within one
+    layer-stacked pool leaf ``(L, n_blocks, ...)`` — the copy-on-write data
+    move when a lane diverges from a shared prefix block.
+
+    Grid is (L,), with the (src, dst) pair as a scalar-prefetch operand:
+    each program DMAs exactly one flattened ``(1, 1, Z)`` tile out of the
+    source block (the index_map dereferences ``src``), and the result is
+    scattered back at ``dst`` — the pool itself is never gathered.  Works
+    for every leaf dtype (bf16/f32 KV, int8 codes, scale rows, int32
+    kv_pos), so the whole tile — validity included — moves verbatim.
+    """
+    L, nb = leaf.shape[0], leaf.shape[1]
+    Z = 1
+    for d in leaf.shape[2:]:
+        Z *= d
+    flat = leaf.reshape(L, nb, Z)
+    sd = jnp.stack([jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)])
+
+    def body(sd_ref, x_ref, o_ref):
+        del sd_ref
+        o_ref[...] = x_ref[...]
+
+    tile = pl.pallas_call(
+        body,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(L,),
+            in_specs=[pl.BlockSpec((1, 1, Z), lambda l, sd: (l, sd[0], 0))],
+            out_specs=pl.BlockSpec((1, 1, Z), lambda l, sd: (l, 0, 0))),
+        out_shape=jax.ShapeDtypeStruct((L, 1, Z), flat.dtype),
+        interpret=interpret,
+    )(sd, flat)
+    return flat.at[:, dst].set(tile[:, 0]).reshape(leaf.shape)
 
 
 # ---------------------------------------------------------------------------

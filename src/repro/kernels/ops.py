@@ -33,6 +33,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.flash_decode import flash_decode as _flash_decode
 from repro.kernels.flash_decode import flash_decode_xla as _flash_decode_xla
+from repro.kernels.flash_decode import paged_block_copy as _paged_block_copy
 from repro.kernels.qlora_matmul import qlora_matmul as _qlora
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 
@@ -105,6 +106,19 @@ def flash_decode(q, k, v, kv_pos, q_pos, **kw):
             return _flash_decode(q, k, v, kv_pos, q_pos,
                                  interpret=not on_tpu(), **kw)
         return _flash_decode_xla(q, k, v, kv_pos, q_pos, **kw)
+
+
+def block_copy(pool_leaf, src, dst, **kw):
+    """Copy one physical block's tile to another within a layer-stacked
+    pool leaf ``(L, n_blocks, ...)`` — the paged pool's copy-on-write data
+    move.  Pallas per-layer DMA under ``use_kernels()``; elsewhere an XLA
+    dynamic gather+scatter with identical semantics (the copy is exact for
+    every dtype, so CoW preserves bit-identical greedy decode)."""
+    with jax.named_scope("obs.block_copy"):
+        if use_kernels():
+            return _paged_block_copy(pool_leaf, src, dst,
+                                     interpret=not on_tpu(), **kw)
+        return pool_leaf.at[:, dst].set(pool_leaf[:, src])
 
 
 def rmsnorm(x, scale, *, eps: float = 1e-6, **kw):

@@ -87,7 +87,8 @@ def _to_request(r: dict):
 def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
                max_tokens_in_flight: int = 0, prefill_chunk: int = 0,
                prefill_bucket: int = 0, paged=None, block_size: int = 0,
-               pool_blocks: int = 0, quiet: bool = False):
+               pool_blocks: int = 0, share_prefixes=None, swap_tier=None,
+               quiet: bool = False):
     from repro.serve import ForecastEngine
     engine = ForecastEngine(cfg, params, num_slots=slots,
                             cache_len=cache_len,
@@ -95,7 +96,9 @@ def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
                             prefill_chunk=prefill_chunk,
                             prefill_bucket=prefill_bucket,
                             paged=paged, block_size=block_size,
-                            pool_blocks=pool_blocks)
+                            pool_blocks=pool_blocks,
+                            share_prefixes=share_prefixes,
+                            swap_tier=swap_tier)
     for r in trace:
         engine.submit(_to_request(r))
     done = engine.run()
@@ -116,6 +119,13 @@ def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
               f"evicted {summ['evictions']}, "
               f"compiled serve_step signatures: "
               f"{engine.num_step_signatures()}")
+        if engine.paged and (engine.share_prefixes or engine.swap_tier):
+            print(f"        prefix sharing: {summ['share_hits']} hits "
+                  f"({summ['full_prompt_hits']} full-prompt, "
+                  f"{summ['shared_blocks']} blocks shared, "
+                  f"{summ['cow_copies']} CoW copies), swap tier: "
+                  f"{summ['swap_outs']} out / {summ['swap_ins']} in "
+                  f"({summ['swap_out_bytes']} B out)")
     return done, summ, engine
 
 
@@ -210,6 +220,23 @@ def main() -> None:
                     help="physical blocks in the paged pool (0 = full "
                          "capacity slots*blocks_per_slot; less "
                          "oversubscribes lanes against real footprints)")
+    ap.add_argument("--share-prefixes", dest="share_prefixes",
+                    action="store_const", const=True, default=None,
+                    help="copy-on-write prefix sharing across lanes "
+                         "(default on for paged pools; "
+                         "REPRO_PREFIX_SHARE=0 disables)")
+    ap.add_argument("--no-share-prefixes", dest="share_prefixes",
+                    action="store_const", const=False,
+                    help="disable prefix sharing (every lane owns private "
+                         "blocks)")
+    ap.add_argument("--swap-tier", dest="swap_tier", action="store_const",
+                    const=True, default=None,
+                    help="host-memory swap tier for displaced lanes "
+                         "(default on for paged pools; REPRO_SWAP_TIER=0 "
+                         "disables)")
+    ap.add_argument("--no-swap-tier", dest="swap_tier", action="store_const",
+                    const=False,
+                    help="disable the swap tier (displaced lanes recompute)")
     ap.add_argument("--trace-out", default="",
                     help="write the repro.obs span timeline as Chrome "
                          "trace-event JSON (Perfetto / chrome://tracing)")
@@ -235,7 +262,9 @@ def main() -> None:
                    prefill_chunk=args.prefill_chunk,
                    prefill_bucket=args.prefill_bucket,
                    paged=args.paged, block_size=args.block_size,
-                   pool_blocks=args.pool_blocks)
+                   pool_blocks=args.pool_blocks,
+                   share_prefixes=args.share_prefixes,
+                   swap_tier=args.swap_tier)
     else:
         run_fixed_batch(cfg, params, api, batch=args.batch,
                         prompt_len=args.prompt_len, gen=args.gen)

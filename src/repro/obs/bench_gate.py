@@ -168,6 +168,15 @@ GATES: Dict[str, List[GateSpec]] = {
                  "concurrency_ratio", "higher", rel_tol=0.0, bound=1.5),
         GateSpec({"name": "serving_paged_vs_contiguous"},
                  "greedy_mismatches", "exact"),
+        # CoW prefix sharing: cluster-skewed traffic must sustain at least
+        # 2x the non-shared paged pool's peak concurrency at equal pool
+        # bytes, bit-identically — scheduling-deterministic, zero tolerance
+        GateSpec({"name": "serving_shared_prefix"},
+                 "concurrency_ratio", "higher", rel_tol=0.0, bound=2.0),
+        GateSpec({"name": "serving_shared_prefix"},
+                 "greedy_mismatches", "exact"),
+        GateSpec({"name": "serving_shared_prefix"},
+                 "serve_step_signatures", "exact"),
     ],
     "collectives": [
         # wire-byte fractions are exact chunk-plan arithmetic: zero tol

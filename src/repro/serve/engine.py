@@ -19,14 +19,42 @@ state lanes are always dense).  Paged decode grants blocks on demand as a
 request's write position crosses a block boundary; on pool exhaustion the
 request **parks** (its lane masked inactive, its blocks and neighbours
 untouched) until frees arrive, and if *every* resident is parked the
-youngest is evicted back onto the queue — prompt + generated tokens — to
-recompute later, so the engine never livelocks while holding blocks hostage.
+youngest is moved out of the pool so the engine never livelocks while
+holding blocks hostage.
+
+Prefix sharing (``share_prefixes``, default on for paged pools /
+REPRO_PREFIX_SHARE=0 disables): admission consults the pool's prefix-hash
+index.  A whole-prompt hit maps every prefix block read-only (refcount
+bump, zero new blocks) and skips prefill entirely — the chain's stored
+last-token logits seed the first sample, so a cluster of users replaying
+the same history costs one prefill total.  A partial block-aligned hit
+shares the matched blocks and prefills as usual, with the shared blocks
+masked out of the insert scatter (the donor's data is bit-identical —
+deterministic prefill at equal positions).  The first write that would
+land in a block with refcount > 1 copy-on-writes it in the grant pass:
+fresh block, device tile copy, table remap, decref.  Admission pricing
+(``blocks_needed``) counts only unshared blocks, so sharers admit even
+when the free list alone couldn't cover them.
+
+Swap tier (``swap_tier``, default on for paged pools / REPRO_SWAP_TIER=0
+disables): the livelock-breaker snapshots the victim lane's logical ring
+on device (async gather — it drains to host np arrays behind later decode
+steps), frees its blocks, and requeues the request; on re-admission the
+saved ring is re-inserted through the same compiled insert and decode
+resumes bit-exactly where it left off — no recompute, TTFT keeps the
+original submit time.  Evict-and-recompute (``_evict``) remains the final
+fallback (swap tier off, or the handle is gone).  Same-tick victims are
+requeued in one batch ordered by original submit order, so multi-eviction
+ticks preserve FIFO.
 
 Decode composes with the whole serving stack: fused flash-decode kernels
 (``REPRO_FLASH_DECODE``; block tables ride a scalar-prefetch operand), int8
 caches (``REPRO_KV_INT8``), and seq-sharded cache layouts
 (``REPRO_CACHE_SHARD=seq`` under an active mesh — rings shard the slot
 axis, paged pools the block axis, with the same pmax/psum combine).
+Shared blocks change none of it: tables are read-only to the kernels, so a
+physical block appearing in several tables just streams the same tile to
+each sharer.
 
     engine = ForecastEngine(cfg, params, num_slots=8, cache_len=256)
     engine.submit(Request(id="r0", prompt=toks, max_new_tokens=32))
@@ -36,7 +64,9 @@ Observability (``repro.obs``, ``REPRO_TRACE=0`` disables): every request
 gets its own Perfetto track carrying the lifecycle
 ``req.submit -> req.queued -> req.prefill -> req.first_token ->
 req.decode -> req.lifecycle -> req.retire`` (park/evict as instant
-events); each engine tick emits an ``engine.decode_step`` span (wrapped in
+events, plus ``pool.share_hit`` / ``pool.cow_copy`` / ``pool.swap_out`` /
+``pool.swap_in`` instants with byte counts whenever sharing or the swap
+tier fire); each engine tick emits an ``engine.decode_step`` span (wrapped in
 ``jax.profiler.TraceAnnotation`` so host and XLA device traces line up)
 plus a ``pool`` counter track (blocks in use / active lanes).  Exactly one
 ``req.lifecycle`` span is emitted per FINISHED request — eviction and
@@ -82,7 +112,9 @@ class ForecastEngine:
                  cache_len: int = 256, max_tokens_in_flight: int = 0,
                  prefill_chunk: int = 0, prefill_bucket: int = 0,
                  force_window: int = 0, paged: Optional[bool] = None,
-                 block_size: int = 0, pool_blocks: int = 0):
+                 block_size: int = 0, pool_blocks: int = 0,
+                 share_prefixes: Optional[bool] = None,
+                 swap_tier: Optional[bool] = None):
         if cfg.family not in _SERVABLE:
             raise ValueError(f"family {cfg.family!r} not servable by the "
                              f"engine (supported: {_SERVABLE})")
@@ -109,8 +141,28 @@ class ForecastEngine:
         else:
             if block_size or pool_blocks:
                 raise ValueError("block_size/pool_blocks require paged=True")
+            if share_prefixes or swap_tier:
+                raise ValueError("share_prefixes/swap_tier require the "
+                                 "paged pool")
             self.pool = CachePool(self.api, cfg, num_slots, cache_len,
                                   force_window=force_window)
+        # CoW prefix sharing + host swap tier: paged-pool features, on by
+        # default there (REPRO_PREFIX_SHARE=0 / REPRO_SWAP_TIER=0 or the
+        # ctor args turn them off independently)
+        self.share_prefixes = bool(paged and (
+            share_prefixes if share_prefixes is not None
+            else os.environ.get("REPRO_PREFIX_SHARE", "1") != "0"))
+        self.swap_tier = bool(paged and (
+            swap_tier if swap_tier is not None
+            else os.environ.get("REPRO_SWAP_TIER", "1") != "0"))
+        # swapped-out lanes: request id -> {"cache": leaves, "pos", "blocks"}
+        # — leaves start as async device gathers and drain to host np arrays
+        # behind later decode steps (see step())
+        self.swap: Dict[str, dict] = {}
+        self._swap_pending: List[str] = []
+        # per-request submit sequence: multi-eviction ticks requeue in this
+        # order, so FIFO survives same-tick victims (resumes keep the id)
+        self._seq: Dict[str, int] = {}
         self.scheduler = FIFOScheduler(SchedulerConfig(
             max_tokens_in_flight=max_tokens_in_flight,
             prefill_chunk=prefill_chunk))
@@ -185,6 +237,7 @@ class ForecastEngine:
                         id=request.id, prompt_len=request.prompt_len,
                         max_new_tokens=request.max_new_tokens)
         self._submit_time[request.id] = time.perf_counter()
+        self._seq.setdefault(request.id, len(self._seq))
         self.scheduler.submit(request)
 
     @property
@@ -212,11 +265,26 @@ class ForecastEngine:
                 tokens_in_flight=self.tokens_in_flight,
                 free_blocks=free_blocks,
                 blocks_needed=blocks_needed):
-            self._admit(req)
+            try:
+                self._admit(req)
+            except RuntimeError:
+                # share-aware pricing raced a chain invalidation (or the
+                # pool shrank between pricing and grant): the admission was
+                # rolled back — put the request back at the head and stop
+                # admitting this tick
+                self.scheduler.requeue_front([req])
+                break
         if self.paged:
             self._grant_pass()
         self._decode()
         self.step_count += 1
+        # drain swap-outs to host np arrays AFTER the decode dispatched —
+        # the device gather overlaps the step instead of blocking it
+        while self._swap_pending:
+            handle = self.swap.get(self._swap_pending.pop())
+            if handle is not None and not handle.get("host"):
+                handle["cache"] = jax.tree.map(np.asarray, handle["cache"])
+                handle["host"] = True
 
     def run(self, max_steps: int = 0) -> Dict[str, FinishedRequest]:
         """Drive steps until every submitted request retires."""
@@ -238,36 +306,100 @@ class ForecastEngine:
 
     def _admit_blocks(self, req: Request) -> int:
         """Paged admission price: blocks covering the prefill ring extent
-        (decode growth is granted on demand)."""
-        return self.pool.blocks_for(self._bucketed_len(req))
+        (decode growth is granted on demand).  Share-aware: blocks served
+        by a live prefix chain cost nothing — a whole-prompt hit admits
+        free, which is what lets a cluster of identical histories oversubscribe
+        the same pool bytes.  A swap-tier resume prices its saved extent."""
+        res = req.resume or {}
+        if self.swap_tier and res.get("swap") in self.swap:
+            handle = self.swap[res["swap"]]
+            return self.pool.blocks_for(min(handle["pos"],
+                                            self.pool.ring_len))
+        need = self.pool.blocks_for(self._bucketed_len(req))
+        if self.share_prefixes:
+            shared, full_hit, _ = self.pool.match_prefix(req.prompt)
+            if full_hit:
+                return 0
+            need -= len(shared)
+        return max(need, 0)
 
     def _admit(self, req: Request) -> None:
         track = f"req:{req.id}"
         t_admit = time.perf_counter()
+        res = req.resume or {}
         obs.add_span("req.queued",
-                     self._submit_time.get(req.id, t_admit), t_admit,
+                     res.get("submitted")
+                     or self._submit_time.get(req.id, t_admit), t_admit,
                      track=track, id=req.id)
         slot = self.pool.acquire()
+        if self.swap_tier and res.get("swap") in self.swap:
+            handle = self.swap.pop(res["swap"])
+            try:
+                self._swap_in(req, slot, handle)
+            except RuntimeError:               # pool raced below the price
+                self.swap[res["swap"]] = handle
+                self.pool.release(slot)
+                raise
+            return
         P = req.prompt_len
         Pb = self._bucketed_len(req)
+        shared: List[int] = []
+        full_hit, chain_logits = False, None
         if self.paged:
-            self.pool.grant_prefix(slot, self.pool.blocks_for(Pb))
-        toks = np.zeros((1, Pb), np.int32)
-        toks[0, :P] = req.prompt
-        # true_len rides along whenever bucketing is on (one bucketed prefill
-        # signature even for exact-fit prompts); a resume that skipped
-        # bucketing prefills at its exact length
-        true_len = (jnp.asarray([P], jnp.int32)
-                    if self.prefill_bucket and (Pb != P or not req.resume)
-                    else None)
-        with obs.span("req.prefill", device=True, track=track, id=req.id,
-                      prompt_len=P, padded_len=Pb, slot=slot,
-                      resumed=req.resume is not None):
-            cache1, logits = self._prefill_fn(self.params,
-                                              jnp.asarray(toks), true_len)
-            self.pool.insert(cache1, slot)
+            if self.share_prefixes:
+                shared, full_hit, chain_logits = \
+                    self.pool.match_prefix(req.prompt)
+            try:
+                self.pool.share_map(slot, shared)
+                if not full_hit:
+                    self.pool.grant_tail(
+                        slot, len(shared),
+                        self.pool.blocks_for(Pb) - len(shared))
+            except RuntimeError:               # pool raced below the price
+                self.pool.release(slot)        # decrefs any shared mapping
+                raise
+            if shared:
+                self.metrics.record_share(len(shared), full_hit)
+                obs.instant("pool.share_hit", track=track, id=req.id,
+                            slot=slot, blocks=len(shared),
+                            full_prompt=bool(full_hit),
+                            bytes=len(shared) * self.pool.block_bytes)
 
-        res = req.resume or {}
+        if full_hit and chain_logits is not None:
+            # whole prompt lives in the pool already: zero prefill, zero
+            # new blocks — the chain's stored last-token logits row seeds
+            # the first sample exactly as a fresh prefill's would
+            logits = jnp.asarray(chain_logits)[None, None]
+            self.metrics.record_admit(0)
+        else:
+            toks = np.zeros((1, Pb), np.int32)
+            toks[0, :P] = req.prompt
+            # true_len rides along whenever bucketing is on (one bucketed
+            # prefill signature even for exact-fit prompts); a resume that
+            # skipped bucketing prefills at its exact length
+            true_len = (jnp.asarray([P], jnp.int32)
+                        if self.prefill_bucket and (Pb != P or not req.resume)
+                        else None)
+            with obs.span("req.prefill", device=True, track=track,
+                          id=req.id, prompt_len=P, padded_len=Pb, slot=slot,
+                          shared_blocks=len(shared),
+                          resumed=req.resume is not None):
+                cache1, logits = self._prefill_fn(self.params,
+                                                  jnp.asarray(toks),
+                                                  true_len)
+                if self.paged:
+                    # shared prefix blocks are read-only — the donor's data
+                    # is bit-identical, so mask them out of the scatter
+                    self.pool.insert(cache1, slot, skip_blocks=len(shared))
+                else:
+                    self.pool.insert(cache1, slot)
+            if self.share_prefixes and req.resume is None:
+                # index this prompt for future sharers (resumes carry
+                # generated continuations — not reusable prompts)
+                self.pool.register_prefix(
+                    slot, req.prompt, np.asarray(logits[0, -1]))
+            self.metrics.record_admit(P)
+
         prior: List[int] = list(res.get("generated", []))
         sp = req.sampling
         base_key = np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)
@@ -284,7 +416,6 @@ class ForecastEngine:
         st = GenState(request=req, slot=slot, pos=P, last_token=tok0,
                       generated=prior,
                       admitted_step=self.step_count, admitted_time=now)
-        self.metrics.record_admit(P)
         done = st.remaining == 1 or tok0 == req.eos_id
         first_of_original = not prior          # st.emit appends into `prior`
         st.emit(tok0, is_last=done, now=now)
@@ -306,11 +437,20 @@ class ForecastEngine:
 
     def _grant_pass(self) -> None:
         """Before each paged decode: make sure every resident lane's next
-        write slot has a physical block.  Grants collect into one device-side
-        kv_pos reset; lanes that can't be granted park (masked inactive, no
-        writes — a parked lane can never corrupt a neighbour).  If parking
-        leaves nothing runnable, evict the youngest parked lane back onto
-        the queue (recompute) and retry — blocks free, progress resumes."""
+        write slot has a physical block IT OWNS.  A write block with
+        refcount > 1 is copy-on-written first (sharers never mutate a
+        donor's prefix; CoW failure parks like any grant failure); a sole
+        owner whose ring wrapped back over indexed prefix content drops the
+        stale chain entries before the write lands.  Grants collect into
+        one device-side kv_pos reset; lanes that can't be granted park
+        (masked inactive, no writes — a parked lane can never corrupt a
+        neighbour).  If parking leaves nothing runnable, the youngest
+        parked lane leaves the pool — swapped to the host tier when
+        enabled, evicted to recompute otherwise — and the pass retries.
+        Same-tick victims requeue in ONE batch ordered by original submit
+        order, so multi-eviction ticks preserve FIFO and a resumed TTFT
+        never resets."""
+        victims: List[Request] = []
         while True:
             fresh: List[int] = []
             parked: List[int] = []
@@ -318,8 +458,25 @@ class ForecastEngine:
                 if st is None:
                     continue
                 lb = (st.pos % self.pool.ring_len) // self.pool.block_size
-                if self.pool.table[i, lb] >= 0:
-                    if self._pos[i] < 0:      # granted now — unpark
+                pb = int(self.pool.table[i, lb])
+                if pb >= 0:
+                    if self.pool.refcount(pb) > 1:
+                        try:                   # shared write block: CoW
+                            old, new = self.pool.cow(i, lb)
+                        except RuntimeError:   # no block for the copy
+                            self._park(i, st)
+                            parked.append(i)
+                            continue
+                        self.metrics.record_cow(self.pool.block_bytes)
+                        obs.instant("pool.cow_copy",
+                                    track=f"req:{st.request.id}",
+                                    id=st.request.id, slot=i, src=old,
+                                    dst=new,
+                                    bytes=self.pool.block_bytes)
+                    elif st.pos >= self.pool.ring_len:
+                        # sole owner wrapping over indexed prefix content
+                        self.pool.invalidate_block(pb)
+                    if self._pos[i] < 0:      # runnable now — unpark
                         self._pos[i] = st.pos
                     continue
                 try:
@@ -327,43 +484,52 @@ class ForecastEngine:
                     if self._pos[i] < 0:
                         self._pos[i] = st.pos
                 except RuntimeError:          # pool exhausted — park
-                    if self._pos[i] >= 0:
-                        self.metrics.record_park()
-                        obs.instant("req.park", track=f"req:{st.request.id}",
-                                    id=st.request.id, slot=i,
-                                    free_blocks=self.pool.free_blocks)
-                    self._pos[i] = -1
+                    self._park(i, st)
                     parked.append(i)
             self.pool.reset_blocks(fresh)
             runnable = any(s is not None and self._pos[i] >= 0
                            for i, s in enumerate(self.slots))
             if runnable or not parked:
-                return
+                break
             if len(parked) == len([s for s in self.slots if s is not None]) \
                     and len(parked) == 1:
                 raise RuntimeError(
                     f"paged pool too small: a single resident request "
                     f"cannot grow ({self.pool.pool_blocks} blocks of "
                     f"{self.pool.block_size})")
-            victim = max(parked,
-                         key=lambda i: (self.slots[i].admitted_step, i))
-            self._evict(victim)
+            victim = max(parked, key=lambda i: (
+                self.slots[i].admitted_step,
+                self._seq.get(self.slots[i].request.id, 0)))
+            if self.swap_tier:
+                victims.append(self._swap_out(victim))
+            else:
+                victims.append(self._evict(victim))
+        if victims:
+            victims.sort(key=lambda r: self._seq.get(r.id, 0))
+            self.scheduler.requeue_front(victims)
 
-    def _evict(self, slot: int) -> None:
-        """Evict a parked lane: free its blocks, requeue the request at the
-        queue head with prompt := original prompt + everything generated
-        (recompute on re-admission).  ``max_new_tokens`` stays the ORIGINAL
-        horizon — ``GenState.generated`` carries the prior tokens, so the
+    def _park(self, slot: int, st: GenState) -> None:
+        if self._pos[slot] >= 0:
+            self.metrics.record_park()
+            obs.instant("req.park", track=f"req:{st.request.id}",
+                        id=st.request.id, slot=slot,
+                        free_blocks=self.pool.free_blocks)
+        self._pos[slot] = -1
+
+    def _resume_request(self, st: GenState) -> Request:
+        """The requeued form of a displaced lane: prompt := original prompt
+        + everything generated, ``max_new_tokens`` the ORIGINAL horizon —
+        ``GenState.generated`` carries the prior tokens, so the
         remaining-budget arithmetic, the per-token fold_in sample counter,
         and greedy continuations are all identical to the uninterrupted
-        run."""
-        st = self.slots[slot]
+        run.  The resume dict keeps the original submit time and
+        first-token time, so TTFT never resets on recompute/swap-in."""
         req = st.request
         res = req.resume or {}
         orig_prompt_len = int(res.get("prompt_len", req.prompt_len))
         orig_prompt = np.asarray(req.prompt, np.int32)[:orig_prompt_len]
         done = np.asarray(st.generated, np.int32)   # prior + this residency
-        resumed = Request(
+        return Request(
             id=req.id, prompt=np.concatenate([orig_prompt, done]),
             max_new_tokens=req.max_new_tokens,
             sampling=req.sampling, eos_id=req.eos_id, arrival_step=0,
@@ -371,15 +537,86 @@ class ForecastEngine:
             resume={"generated": [int(t) for t in done],
                     "prompt_len": orig_prompt_len,
                     "first_token_time": res.get("first_token_time")
-                    or st.first_token_time})
+                    or st.first_token_time,
+                    "submitted": res.get("submitted")
+                    or self._submit_time.get(req.id)})
+
+    def _clear_lane(self, slot: int) -> None:
         self.slots[slot] = None
         self._pos[slot] = -1
         self._tok[slot, 0] = 0
         self.pool.release(slot)
+
+    def _evict(self, slot: int) -> Request:
+        """Recompute fallback: free the lane's blocks and return the
+        resumed request (the caller batches same-tick victims into one
+        FIFO-ordered requeue)."""
+        st = self.slots[slot]
+        resumed = self._resume_request(st)
+        self._clear_lane(slot)
         self.metrics.record_evict()
-        obs.instant("req.evict", track=f"req:{req.id}", id=req.id,
-                    slot=slot, generated=len(done))
-        self.scheduler.requeue_front([resumed])
+        obs.instant("req.evict", track=f"req:{st.request.id}",
+                    id=st.request.id, slot=slot,
+                    generated=len(st.generated))
+        return resumed
+
+    # -- swap tier ------------------------------------------------------------
+
+    def _swap_out(self, slot: int) -> Request:
+        """Displace a parked lane WITHOUT losing its KV: snapshot the
+        logical ring on device (async — drained to host behind later
+        steps), free the blocks, return the resumed request.  Recompute
+        never happens unless the handle disappears."""
+        st = self.slots[slot]
+        req = st.request
+        resumed = self._resume_request(st)
+        resumed.resume["swap"] = req.id
+        lane = self.pool.gather_lane(slot)     # BEFORE release zeroes the row
+        blocks = int((self.pool.table[slot] >= 0).sum())
+        nbytes = blocks * self.pool.block_bytes
+        self.swap[req.id] = {"cache": lane, "pos": st.pos, "blocks": blocks}
+        self._swap_pending.append(req.id)
+        self._clear_lane(slot)
+        self.metrics.record_swap_out(nbytes)
+        obs.instant("pool.swap_out", track=f"req:{req.id}", id=req.id,
+                    slot=slot, blocks=blocks, bytes=nbytes,
+                    generated=len(st.generated))
+        return resumed
+
+    def _swap_in(self, req: Request, slot: int, handle: dict) -> None:
+        """Re-admit a swapped-out lane: grant blocks for the saved ring
+        extent, re-insert the snapshot through the one compiled insert, and
+        restore the batch rows exactly — no prefill, no resample; the next
+        decode step continues where the lane left off."""
+        res = req.resume or {}
+        track = f"req:{req.id}"
+        need = self.pool.blocks_for(min(handle["pos"], self.pool.ring_len))
+        granted = self.pool.grant_prefix(slot, need)   # raises w/o effects
+        nbytes = need * self.pool.block_bytes
+        with obs.span("req.swap_in", device=True, track=track, id=req.id,
+                      slot=slot, blocks=need, bytes=nbytes):
+            self.pool.insert(jax.tree.map(jnp.asarray, handle["cache"]),
+                             slot)
+        del granted
+        prior: List[int] = list(res.get("generated", []))
+        sp = req.sampling
+        now = time.perf_counter()
+        st = GenState(request=req, slot=slot, pos=int(handle["pos"]),
+                      last_token=prior[-1], generated=list(prior),
+                      admitted_step=self.step_count, admitted_time=now)
+        st.first_token_time = res.get("first_token_time") or 0.0
+        self.metrics.record_admit(0)
+        self.metrics.record_swap_in(nbytes)
+        obs.instant("pool.swap_in", track=track, id=req.id, slot=slot,
+                    blocks=need, bytes=nbytes)
+        self.slots[slot] = st
+        self._tok[slot, 0] = prior[-1]
+        self._pos[slot] = st.pos
+        self._temp[slot] = sp.temperature
+        self._topk[slot] = sp.top_k
+        self._topp[slot] = sp.top_p
+        self._key[slot] = np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)
+        self._t[slot] = len(prior)            # next token's fold_in counter
 
     # -- decode / retire -----------------------------------------------------
 
@@ -442,7 +679,11 @@ class ForecastEngine:
         self.pool.release(slot)
         res = st.request.resume or {}
         first_tok = res.get("first_token_time") or st.first_token_time
-        submit_t = self._submit_time.get(st.request.id, st.admitted_time)
+        # resumes carry the ORIGINAL submit time: TTFT measures the user's
+        # wait, not the latest recompute/swap-in residency
+        submit_t = (res.get("submitted")
+                    or self._submit_time.get(st.request.id,
+                                             st.admitted_time))
         ttft = first_tok - submit_t
         self.metrics.record_finish(ttft)
         now = time.perf_counter()

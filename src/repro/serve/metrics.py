@@ -41,7 +41,14 @@ Summary fields
 ``pool_blocks``           physical cache blocks (paged; lanes otherwise)
 ``peak_in_flight``        max resident requests observed
 ``parked_events``         block-grant failures (paged)
-``evictions``             livelock-breaking evictions
+``evictions``             livelock-breaking evictions (recompute fallback)
+``share_hits``            admissions that mapped >= 1 shared prefix block
+``full_prompt_hits``      admissions that skipped prefill entirely (whole
+                          prompt matched a live chain)
+``shared_blocks``         blocks mapped read-only instead of allocated
+``cow_copies``/``cow_bytes``       copy-on-write block copies / bytes moved
+``swap_outs``/``swap_out_bytes``   lanes swapped to host / HBM bytes freed
+``swap_ins``/``swap_in_bytes``     lanes restored from host / bytes refilled
 """
 
 from __future__ import annotations
@@ -70,6 +77,15 @@ class EngineMetrics:
     peak_in_flight: int = 0                   # max resident requests
     parked_events: int = 0                    # block-grant failures (paged)
     evictions: int = 0                        # livelock-breaking evictions
+    share_hits: int = 0                       # admissions sharing >=1 block
+    full_prompt_hits: int = 0                 # prefill skipped entirely
+    shared_blocks: int = 0                    # blocks mapped, not allocated
+    cow_copies: int = 0
+    cow_bytes: int = 0
+    swap_outs: int = 0
+    swap_out_bytes: int = 0
+    swap_ins: int = 0
+    swap_in_bytes: int = 0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     ttft_hist: Histogram = dataclasses.field(default_factory=Histogram)
     itl_hist: Histogram = dataclasses.field(default_factory=Histogram)
@@ -104,6 +120,23 @@ class EngineMetrics:
 
     def record_evict(self) -> None:
         self.evictions += 1
+
+    def record_share(self, blocks: int, full_hit: bool) -> None:
+        self.share_hits += 1
+        self.shared_blocks += blocks
+        self.full_prompt_hits += bool(full_hit)
+
+    def record_cow(self, nbytes: int) -> None:
+        self.cow_copies += 1
+        self.cow_bytes += nbytes
+
+    def record_swap_out(self, nbytes: int) -> None:
+        self.swap_outs += 1
+        self.swap_out_bytes += nbytes
+
+    def record_swap_in(self, nbytes: int) -> None:
+        self.swap_ins += 1
+        self.swap_in_bytes += nbytes
 
     def record_finish(self, ttft_s: float) -> None:
         self.requests_finished += 1
@@ -155,4 +188,13 @@ class EngineMetrics:
             "peak_in_flight": self.peak_in_flight,
             "parked_events": self.parked_events,
             "evictions": self.evictions,
+            "share_hits": self.share_hits,
+            "full_prompt_hits": self.full_prompt_hits,
+            "shared_blocks": self.shared_blocks,
+            "cow_copies": self.cow_copies,
+            "cow_bytes": self.cow_bytes,
+            "swap_outs": self.swap_outs,
+            "swap_out_bytes": self.swap_out_bytes,
+            "swap_ins": self.swap_ins,
+            "swap_in_bytes": self.swap_in_bytes,
         }

@@ -53,8 +53,16 @@ class FIFOScheduler:
         self._queue.append(request)
 
     def requeue_front(self, requests: List[Request]) -> None:
-        """Push evicted/unplaceable requests back at the head (order
-        preserved) — they stay first in line, FIFO fairness intact."""
+        """Push evicted/unplaceable requests back at the head, list order
+        preserved (``requests[0]`` pops first).
+
+        Contract: a tick's displaced requests must arrive in ONE call,
+        ordered oldest-submit first — the engine batches its victims and
+        sorts by original submit sequence.  Separate per-victim calls would
+        stack each later call in front of the earlier one, reversing
+        arrival order across the tick (the requeue-ordering bug this
+        replaces).  Resumed requests keep their id and original submit
+        time, so TTFT keeps measuring from the user's submit."""
         for r in reversed(requests):
             obs.instant("sched.requeue", track=f"req:{r.id}", id=r.id,
                         queue_depth=len(self._queue))
@@ -78,7 +86,10 @@ class FIFOScheduler:
         ``blocks_needed(req)`` prices a request at its prefill block count
         (decode growth is granted on demand, parking on exhaustion) — a
         short request no longer costs a whole ``cache_len`` lane, which is
-        exactly where the paged concurrency win comes from.  ``free_blocks``
+        exactly where the paged concurrency win comes from.  With prefix
+        sharing the engine's ``blocks_needed`` prices only UNSHARED blocks
+        (a whole-prompt chain hit costs 0), so cluster-skewed traffic
+        admits far past the free list's nominal capacity.  ``free_blocks``
         < 0 (contiguous lanes) disables block accounting.
         """
         cfg = self.config

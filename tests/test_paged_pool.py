@@ -132,12 +132,19 @@ def test_partition_invariant_property(n_blocks, ops):
 
 
 def test_auto_block_size_divides():
-    for ring in (25, 48, 96, 128, 1):
+    for ring in (25, 48, 96, 128, 1, 97, 31, 14):
         bs = auto_block_size(ring)
         assert ring % bs == 0
     assert auto_block_size(96) == 16          # divisor nearest the target
     assert auto_block_size(48) == 16
     assert auto_block_size(25) == 25          # 1/5/25: 25 is closest to 16
+    # prime rings must NOT degenerate to block_size=1 (table length ==
+    # ring_len, single-token scatters): the min-tile clamp picks the whole
+    # ring as one block instead
+    assert auto_block_size(97) == 97
+    assert auto_block_size(31) == 31
+    assert auto_block_size(14) == 14          # 2 and 7 sit below the clamp
+    assert auto_block_size(4) == 4            # tiny rings keep working
 
 
 # ---------------------------------------------------------------------------
@@ -265,8 +272,11 @@ ks = jax.random.split(jax.random.PRNGKey(0), 3)
 q = jax.random.normal(ks[0], (B, 1, Hk * G, D))
 k = jax.random.normal(ks[1], (nb, bs, Hk, D))
 v = jax.random.normal(ks[2], (nb, bs, Hk, D))
-# blocks deliberately straddle both model shards; row 3 inactive (pos -1)
-tbl = jnp.asarray([[0, 8, 1, 9], [15, 2, -1, -1], [4, 12, 5, -1],
+# blocks deliberately straddle both model shards; row 3 inactive (pos -1);
+# rows 0 and 2 SHARE physical block 0 at the same logical index (a CoW
+# prefix-share grant) — per-entry localization must resolve both sharers
+# to the same stripe-local tile
+tbl = jnp.asarray([[0, 8, 1, 9], [15, 2, -1, -1], [0, 12, 5, -1],
                    [3, 11, 6, 14]], jnp.int32)
 pos = jnp.asarray([T * bs - 1, 2 * bs - 5, 2 * bs + 7, -1], jnp.int32)
 kv_pos = np.full((nb, bs), -1, np.int32)
@@ -368,7 +378,10 @@ def test_pool_exhaustion_parks_without_corruption(dense):
 def test_simultaneous_exhaustion_evicts_and_recomputes(dense):
     """Both residents hit the block wall on the same step: the youngest is
     evicted back onto the queue (prompt + generated) and recomputed once
-    blocks free — greedy outputs still bit-identical to solo."""
+    blocks free — greedy outputs still bit-identical to solo.  This pins
+    the recompute FALLBACK, so the swap tier (which would displace without
+    evicting) is explicitly off; tests/test_prefix_share.py covers the
+    swap-tier version of the same squeeze."""
     cfg, api, params = dense
     prompts = _prompts(cfg, [6, 6], seed=27)
     gen = 16
@@ -379,7 +392,8 @@ def test_simultaneous_exhaustion_evicts_and_recomputes(dense):
     # could never re-admit and run() would spin forever
     eng = ForecastEngine(cfg, params, num_slots=2, cache_len=CACHE_LEN,
                          paged=True, block_size=8, pool_blocks=4,
-                         max_tokens_in_flight=2 * (6 + gen))
+                         max_tokens_in_flight=2 * (6 + gen),
+                         swap_tier=False)
     eng.submit(Request(id="r0", prompt=prompts[0], max_new_tokens=gen))
     eng.submit(Request(id="r1", prompt=prompts[1], max_new_tokens=gen))
     done = eng.run(max_steps=500)

@@ -1,0 +1,417 @@
+"""Copy-on-write prefix sharing + host swap tier for the paged KV pool:
+refcounted allocator invariants (hypothesis property over share/CoW/free
+sequences), the pool's prefix-chain index lifecycle, the Pallas block-copy
+kernel, shared tables through the decode kernels, engine-level greedy
+parity (cluster-skewed traces, full-prompt prefill skips), swap-out /
+swap-in bit-exactness vs never-swapped lanes, and FIFO requeue ordering
+for multi-victim ticks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.configs import get_smoke_config
+from repro.kernels import ref
+from repro.kernels.flash_decode import (flash_decode, flash_decode_xla,
+                                        paged_block_copy)
+from repro.models.registry import get_model
+from repro.serve import ForecastEngine, Request
+from repro.serve.cache_pool import BlockAllocator, PagedCachePool
+from repro.serve.scheduler import FIFOScheduler
+
+CACHE_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_smoke_config("qwen3-0.6b")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+def _solo_greedy(api, cfg, params, prompt, gen, cache_len=CACHE_LEN):
+    from repro.launch.steps import make_serve_step
+    cache, logits = api.prefill(
+        params, cfg, {"tokens": jnp.asarray(prompt[None])},
+        cache_len=cache_len)
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+    out = [int(tok[0, 0])]
+    P = len(prompt)
+    for i in range(gen - 1):
+        tok, cache = serve(params, cache,
+                           {"token": tok,
+                            "pos": jnp.asarray([P + i], jnp.int32)})
+        out.append(int(tok[0, 0]))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# refcounted allocator (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def test_allocator_refcount_lifecycle():
+    a = BlockAllocator(4)
+    b0, b1 = a.alloc(2)
+    assert a.refcount(b0) == 1
+    assert a.incref(b0) == 2
+    with pytest.raises(ValueError, match="shared"):
+        a.free([b0])                          # shared blocks never free()
+    assert not a.decref(b0)                   # still one owner left
+    assert a.refcount(b0) == 1
+    assert a.decref(b0)                       # last ref -> back to free list
+    assert a.refcount(b0) == 0
+    with pytest.raises(ValueError):
+        a.decref(b0)                          # double-free
+    with pytest.raises(ValueError):
+        a.incref(b0)                          # can't share a free block
+    a.free([b1])                              # exclusive free still works
+    assert a.free_blocks == 4
+
+
+def _check_share_partition(a: BlockAllocator, rows):
+    """Free list + rows partition the pool; refcount == row citations."""
+    held = {}
+    for r in rows:
+        for b in r:
+            held[b] = held.get(b, 0) + 1
+    free = set(a._free)
+    assert len(free) == len(a._free), "duplicate in free list"
+    assert free.isdisjoint(held), "block both free and cited"
+    assert free | set(held) == set(range(a.n_blocks)), "block leaked"
+    assert set(held) == a._used
+    for b, c in held.items():
+        assert a.refcount(b) == c, (b, a.refcount(b), c)
+
+
+def _drive_share(a: BlockAllocator, ops):
+    """Model a lane table as rows of block ids; exercise alloc / share
+    (incref) / CoW (alloc+decref) / release (decref row)."""
+    rows = []
+    for op, x, y in ops:
+        if op == 0:                            # admit: alloc 1-3 blocks
+            n = 1 + x % 3
+            if n <= a.free_blocks:
+                rows.append(a.alloc(n))
+        elif op == 1 and rows:                 # share a row into a new lane
+            src = rows[x % len(rows)]
+            for b in src:
+                a.incref(b)
+            rows.append(list(src))
+        elif op == 2 and rows:                 # CoW one shared block
+            r = rows[x % len(rows)]
+            j = y % len(r)
+            if a.refcount(r[j]) > 1 and a.free_blocks >= 1:
+                fresh = a.alloc(1)[0]
+                assert not a.decref(r[j])      # donor still holds it
+                r[j] = fresh
+        elif op == 3 and rows:                 # retire a lane
+            for b in rows.pop(x % len(rows)):
+                a.decref(b)
+        _check_share_partition(a, rows)
+    for r in rows:                             # drain: nothing leaks
+        for b in r:
+            a.decref(b)
+    _check_share_partition(a, [])
+    assert a.free_blocks == a.n_blocks
+
+
+def test_share_partition_invariant_seeded():
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        a = BlockAllocator(int(rng.integers(1, 24)))
+        ops = [(int(rng.integers(4)), int(rng.integers(100)),
+                int(rng.integers(100))) for _ in range(60)]
+        _drive_share(a, ops)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=32),
+       st.lists(st.tuples(st.integers(min_value=0, max_value=3),
+                          st.integers(min_value=0, max_value=999),
+                          st.integers(min_value=0, max_value=999)),
+                max_size=80))
+def test_share_partition_invariant_property(n_blocks, ops):
+    """Arbitrary share/CoW/free sequences preserve the free-list partition
+    and never double-free or leak a refcounted block."""
+    _drive_share(BlockAllocator(n_blocks), ops)
+
+
+# ---------------------------------------------------------------------------
+# pool chain index + CoW (device arrays, no model forward)
+# ---------------------------------------------------------------------------
+
+def _fake_ring(pool, valid, seed=0):
+    """Batch-1 prefill-shaped leaves with recognizable random data and the
+    first ``valid`` ring slots valid."""
+    rng = np.random.default_rng(seed)
+    L = pool.cache["kv_pos"].shape[0]
+    ring = {k: jnp.asarray(
+        rng.standard_normal((p.shape[0], 1, pool.ring_len) + p.shape[3:]),
+        p.dtype) for k, p in pool.cache.items()}
+    pos = np.broadcast_to(np.arange(pool.ring_len, dtype=np.int32),
+                          (L, 1, pool.ring_len)).copy()
+    pos[..., valid:] = -1
+    ring["kv_pos"] = jnp.asarray(pos)
+    return ring
+
+
+def test_pool_share_cow_chain_lifecycle(dense):
+    cfg, _, _ = dense
+    pool = PagedCachePool(cfg, num_slots=3, cache_len=48, block_size=8,
+                          pool_blocks=10)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+
+    s0 = pool.acquire()
+    pool.grant_tail(s0, 0, pool.blocks_for(22))
+    pool.insert(_fake_ring(pool, 22), s0)
+    pool.register_prefix(s0, prompt, logits_row=np.arange(8, dtype=np.float32))
+
+    # whole-prompt hit returns the full chain + stored logits
+    blocks, full, logits = pool.match_prefix(prompt)
+    assert full and len(blocks) == 3 and logits is not None
+    # block-aligned partial hit (divergent tail)
+    tail = np.concatenate([prompt[:16],
+                           rng.integers(0, cfg.vocab_size, 6)
+                           .astype(np.int32)])
+    pblocks, pfull, plogits = pool.match_prefix(tail)
+    assert not pfull and plogits is None and len(pblocks) == 2
+    assert pblocks == blocks[:2]
+    # no hit at all
+    assert pool.match_prefix(rng.integers(0, cfg.vocab_size, 22)
+                             .astype(np.int32)) == ([], False, None)
+
+    s1 = pool.acquire()
+    pool.share_map(s1, blocks)
+    assert [pool.refcount(b) for b in blocks] == [2, 2, 2]
+    assert pool.blocks_in_use == 3             # zero new blocks
+    pool.assert_partition()
+
+    before = {k: np.asarray(v[:, blocks[2]]) for k, v in pool.cache.items()}
+    old, new = pool.cow(s1, 2)
+    assert old == blocks[2] and pool.refcount(old) == 1 \
+        and pool.refcount(new) == 1
+    pool.assert_partition()
+    for k, v in pool.cache.items():            # tile copied verbatim
+        assert np.array_equal(np.asarray(v[:, new]), before[k]), k
+
+    # retiring the sharer leaves the donor's chain intact...
+    pool.release(s1)
+    pool.assert_partition()
+    assert pool.match_prefix(prompt)[1]
+    # ...retiring the donor kills every chain citing its blocks
+    pool.release(s0)
+    pool.assert_partition()
+    assert pool.match_prefix(prompt) == ([], False, None)
+    assert pool.match_prefix(tail) == ([], False, None)
+    assert pool.free_blocks == 10 and not pool._chains \
+        and not pool._block_chains
+
+
+def test_pool_wrap_write_invalidates_chain(dense):
+    """A sole owner wrapping its ring over indexed prefix content must drop
+    the chain entries citing the overwritten block."""
+    cfg, _, _ = dense
+    pool = PagedCachePool(cfg, num_slots=2, cache_len=16, block_size=8)
+    prompt = np.arange(12, dtype=np.int32)
+    s = pool.acquire()
+    pool.grant_tail(s, 0, 2)
+    pool.register_prefix(s, prompt, logits_row=np.zeros(4, np.float32))
+    assert pool.match_prefix(prompt)[1]
+    pool.invalidate_block(int(pool.table[s, 0]))   # the wrap write's block
+    assert pool.match_prefix(prompt) == ([], False, None)
+    pool.release(s)
+
+
+def test_prompts_longer_than_ring_never_index(dense):
+    cfg, _, _ = dense
+    pool = PagedCachePool(cfg, num_slots=1, cache_len=16, block_size=8)
+    long = np.arange(20, dtype=np.int32)       # > ring_len: wrapped away
+    s = pool.acquire()
+    pool.grant_tail(s, 0, 2)
+    pool.register_prefix(s, long, logits_row=np.zeros(4, np.float32))
+    assert not pool._chains
+    assert pool.match_prefix(long) == ([], False, None)
+    pool.release(s)
+
+
+# ---------------------------------------------------------------------------
+# block-copy kernel + shared tables through the decode kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_paged_block_copy_matches_xla(dtype):
+    rng = np.random.default_rng(5)
+    leaf = jnp.asarray(rng.integers(-100, 100, (3, 6, 8, 2, 4)), dtype)
+    src, dst = jnp.asarray(4, jnp.int32), jnp.asarray(1, jnp.int32)
+    got = paged_block_copy(leaf, src, dst, interpret=True)
+    want = leaf.at[:, 1].set(leaf[:, 4])
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    # 2D leaves (per-slot scalars like kv_pos) take the same path
+    flat = jnp.asarray(rng.integers(-5, 50, (3, 6, 8)), jnp.int32)
+    got2 = paged_block_copy(flat, src, dst, interpret=True)
+    assert np.array_equal(np.asarray(got2),
+                          np.asarray(flat.at[:, 1].set(flat[:, 4])))
+
+
+def test_shared_table_rows_match_oracle():
+    """One physical block cited by several table rows (a prefix-share
+    grant) must decode exactly like private copies would — the kernels
+    treat tables as read-only."""
+    nb, bs, Hk, G, D, B, T = 10, 16, 2, 4, 32, 3, 3
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (B, 1, Hk * G, D))
+    k = jax.random.normal(ks[1], (nb, bs, Hk, D))
+    v = jax.random.normal(ks[2], (nb, bs, Hk, D))
+    # rows 0/1/2 share physical blocks 7 and 2 at the same logical index
+    # (their common prefix); tails diverge (blocks 5, 8, ungranted)
+    tbl = jnp.asarray([[7, 2, 5], [7, 2, 8], [7, 2, -1]], jnp.int32)
+    q_pos = np.asarray([3 * bs - 1, 2 * bs + 7, 2 * bs - 2])
+    kv_pos = np.full((nb, bs), -1, np.int32)
+    for b in range(B):
+        for j in range(T):
+            pb = int(tbl[b, j])
+            if pb < 0:
+                continue
+            for o in range(bs):
+                if j * bs + o <= q_pos[b]:
+                    kv_pos[pb, o] = max(kv_pos[pb, o], j * bs + o)
+    kv_pos, q_pos = jnp.asarray(kv_pos), jnp.asarray(q_pos, jnp.int32)
+    o_r = ref.flash_decode_ref(q, k, v, kv_pos, q_pos, block_tables=tbl)
+    o_p = flash_decode(q, k, v, kv_pos, q_pos, block_tables=tbl,
+                       n_splits=2, interpret=True)
+    o_x = flash_decode_xla(q, k, v, kv_pos, q_pos, block_tables=tbl)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(o_x), np.asarray(o_r), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: cluster-skewed traces, swap round trips, FIFO requeue
+# ---------------------------------------------------------------------------
+
+def _run_cluster(cfg, params, reqs, *, share, swap, pool_blocks=0,
+                 slots=8, gen=8, check_queue_order=False):
+    eng = ForecastEngine(cfg, params, num_slots=slots, cache_len=CACHE_LEN,
+                         paged=True, block_size=8, pool_blocks=pool_blocks,
+                         share_prefixes=share, swap_tier=swap)
+    for r in reqs:
+        eng.submit(Request(id=r["id"], prompt=r["prompt"],
+                           max_new_tokens=gen,
+                           arrival_step=r.get("arrival", 0)))
+    while eng.scheduler.pending or eng.active_requests:
+        assert eng.step_count < 500, "engine did not drain"
+        eng.step()
+        if check_queue_order:
+            # displaced/queued requests always sit in original submit order
+            seqs = [eng._seq[r.id] for r in eng.scheduler._queue]
+            assert seqs == sorted(seqs), seqs
+    assert eng.num_step_signatures() == 1
+    eng.pool.assert_partition()
+    assert eng.pool.blocks_in_use == 0
+    return {k: v.tokens.tolist() for k, v in eng.finished.items()}, eng
+
+
+def test_cluster_trace_share_parity(dense):
+    """Two clusters of identical prompts + divergent-tail members: shared
+    engine output is bit-identical to the non-shared baseline, prefill work
+    drops, and share/full-hit/CoW all actually fire."""
+    cfg, _, params = dense
+    rng = np.random.default_rng(17)
+    core = [rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+            for _ in range(2)]
+    reqs = []
+    for c in range(2):
+        for u in range(3):                     # identical replays
+            reqs.append({"id": f"c{c}u{u}", "prompt": core[c],
+                         "arrival": c + 2 * u})
+        reqs.append({"id": f"c{c}d", "prompt": np.concatenate(
+            [core[c][:16],
+             rng.integers(0, cfg.vocab_size, 6).astype(np.int32)]),
+            "arrival": 6})
+    base, eb = _run_cluster(cfg, params, reqs, share=False, swap=False)
+    shared, es = _run_cluster(cfg, params, reqs, share=True, swap=True)
+    assert shared == base
+    m = es.metrics
+    assert m.share_hits > 0 and m.full_prompt_hits > 0 and m.cow_copies > 0
+    assert m.shared_blocks > 0 and m.cow_bytes > 0
+    # full-prompt hits skipped their prefills entirely
+    assert m.prefill_tokens < eb.metrics.prefill_tokens
+    s = m.summary()
+    assert s["share_hits"] == m.share_hits
+    assert s["cow_bytes"] == m.cow_bytes
+
+
+def test_swap_roundtrip_matches_never_swapped(dense):
+    """Identical prompts on a pool too small for simultaneous growth: lanes
+    swap to host and back, never recompute, and every output matches the
+    full-pool run bit-for-bit — with the queue FIFO-ordered even on
+    multi-victim ticks."""
+    cfg, api, params = dense
+    rng = np.random.default_rng(19)
+    core = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+    reqs = [{"id": f"u{i}", "prompt": core} for i in range(4)]
+    base, _ = _run_cluster(cfg, params, reqs, share=False, swap=False)
+    tight, eng = _run_cluster(cfg, params, reqs, share=True, swap=True,
+                              pool_blocks=4, check_queue_order=True)
+    assert tight == base
+    m = eng.metrics
+    assert m.swap_outs > 0 and m.swap_ins > 0
+    assert m.evictions == 0                    # swap replaced recompute
+    assert m.swap_out_bytes > 0 and m.swap_in_bytes > 0
+    assert not eng.swap and not eng._swap_pending
+    # TTFT measured from the ORIGINAL submit survives displacement
+    for fin in eng.finished.values():
+        assert fin.ttft_s >= 0
+
+
+def test_swap_disabled_falls_back_to_recompute(dense):
+    cfg, _, params = dense
+    rng = np.random.default_rng(19)
+    core = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+    reqs = [{"id": f"u{i}", "prompt": core} for i in range(4)]
+    base, _ = _run_cluster(cfg, params, reqs, share=False, swap=False)
+    rec, eng = _run_cluster(cfg, params, reqs, share=True, swap=False,
+                            pool_blocks=4, check_queue_order=True)
+    assert rec == base
+    assert eng.metrics.evictions > 0 and eng.metrics.swap_outs == 0
+
+
+def test_full_prompt_hit_skips_prefill_and_matches_solo(dense):
+    cfg, api, params = dense
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, 22).astype(np.int32)
+    solo = _solo_greedy(api, cfg, params, prompt, 6)
+    reqs = [{"id": "a", "prompt": prompt},
+            {"id": "b", "prompt": prompt, "arrival": 2}]
+    done, eng = _run_cluster(cfg, params, reqs, share=True, swap=True,
+                             gen=6)
+    assert done["a"] == solo and done["b"] == solo
+    # exactly one prefill paid for the pair
+    assert eng.metrics.prefill_tokens == len(prompt)
+    assert eng.metrics.full_prompt_hits == 1
+
+
+def test_requeue_front_batch_preserves_fifo():
+    sched = FIFOScheduler()
+    reqs = [Request(id=f"r{i}", prompt=np.zeros(4, np.int32),
+                    max_new_tokens=2) for i in range(3)]
+    sched.requeue_front(reqs)                  # one batched call
+    out = sched.admit(now_step=0, free_slots=3, tokens_in_flight=0)
+    assert [r.id for r in out] == ["r0", "r1", "r2"]
+
+
+def test_flags_require_paged(dense):
+    cfg, _, params = dense
+    with pytest.raises(ValueError, match="paged"):
+        ForecastEngine(cfg, params, num_slots=2, cache_len=CACHE_LEN,
+                       paged=False, share_prefixes=True)
+    with pytest.raises(ValueError, match="paged"):
+        ForecastEngine(cfg, params, num_slots=2, cache_len=CACHE_LEN,
+                       paged=False, swap_tier=True)

@@ -70,12 +70,18 @@ def main() -> None:
     # gate baselines must be read BEFORE the suites rewrite the files
     baselines = {}
     if args.gate:
+        current_prov = bench_gate.provenance()
         for suite in bench_gate.BENCH_SUITES:
             base = bench_gate.load_bench(suite)
             if base is None:
                 print(f"# gate: no committed BENCH_{suite}.json — "
                       f"absolute bounds only", flush=True)
             baselines[suite] = base
+            # cross-backend baselines make relative gates bogus: warn,
+            # don't fail (absolute bounds still hold)
+            for warning in bench_gate.provenance_drift(
+                    bench_gate.load_provenance(suite), current_prov):
+                print(f"# gate WARNING [{suite}]: {warning}", flush=True)
 
     failures = 0
     gate_results: dict = {}

@@ -25,6 +25,12 @@ entirely, so the shared pool sustains a multiple of the baseline's peak
 concurrency; the row records the ratio plus share/CoW/swap counters and
 asserts greedy outputs are bit-identical between the two engines.
 
+Row 4 — Zipf-cluster synthetic trace through the shared pool: cluster
+sizes drawn rank-Zipf (one head cluster dominating, singleton tail — the
+fleet-shaped request mix a federated deployment actually sees), reporting
+share-hit / full-hit / swap rates plus per-cluster TTFT percentiles rolled
+up through the mergeable fleet ledger.
+
 Rows land in BENCH_serving.json via benchmarks/run.py.
 """
 
@@ -245,6 +251,120 @@ def _cluster_skew_case(full: bool):
     return row
 
 
+def zipf_cluster_sizes(n_requests: int, n_clusters: int,
+                       exponent: float = 1.2) -> np.ndarray:
+    """Deterministic Zipf cluster sizes: size_k ∝ 1/k^exponent, rounded to
+    sum exactly to ``n_requests`` with every cluster non-empty.  Rank 1 is
+    the head cluster (the "millions of users replaying one context"
+    regime); the tail clusters approximate singletons."""
+    w = 1.0 / np.arange(1, n_clusters + 1, dtype=np.float64) ** exponent
+    w /= w.sum()
+    sizes = np.maximum(1, np.round(w * n_requests).astype(np.int64))
+    while sizes.sum() > n_requests:
+        sizes[int(np.argmax(sizes))] -= 1
+    while sizes.sum() < n_requests:
+        sizes[int(np.argmin(sizes))] += 1
+    return sizes
+
+
+def _zipf_trace_case(full: bool):
+    """Zipf-distributed cluster sizes through the shared-prefix pool — the
+    fleet-shaped synthetic trace (ROADMAP follow-up after PR 7).  Each
+    cluster has one core prompt; the head cluster dominates the request
+    count, so shared-prefix admission should turn most of the trace into
+    full-prompt chain hits.  Per-request TTFTs land in a
+    :class:`repro.obs.fleet.FleetLedger` keyed by cluster, so the row's
+    latency percentiles come from the same mergeable-sketch roll-up the
+    federated trainer uses; share-hit / swap rates come off the engine
+    metrics."""
+    from repro.configs import get_smoke_config
+    from repro.models.registry import get_model
+    from repro.obs.fleet import FleetLedger
+    from repro.serve import Request
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(3))
+
+    cache_len, block = 48, 8
+    n_req = 36 if full else 18
+    n_clusters = 6
+    exponent = 1.2
+    sizes = zipf_cluster_sizes(n_req, n_clusters, exponent)
+    core_len, tail_len, gen = 22, 6, 8
+    slots = 16 if full else 12
+    pool_blocks = 14                          # << slots·lane: swaps happen
+    rng = np.random.default_rng(13)
+    cores = [rng.integers(0, cfg.vocab_size, core_len).astype(np.int32)
+             for _ in range(n_clusters)]
+
+    reqs = []                                 # (id, cluster, prompt, arrival)
+    for c, size in enumerate(sizes):
+        for m in range(int(size)):
+            if m == 0:                        # donor pays the prefill
+                prompt, kind = cores[c], "donor"
+            elif m % 3 == 2:                  # divergent tail: own blocks
+                prompt = np.concatenate(
+                    [cores[c], rng.integers(0, cfg.vocab_size, tail_len)
+                     .astype(np.int32)])
+                kind = "tail"
+            else:                             # exact replay: chain full hit
+                prompt, kind = cores[c], "replay"
+            # donors (m=0) arrive first, then the member waves interleave
+            reqs.append((f"z{c}m{m}", c, prompt, kind, m))
+
+    eng, offset = _warmed_engine(
+        cfg, params, [core_len, core_len + tail_len], cores[0].tolist(),
+        slots=slots, cache_len=cache_len, paged=True, block_size=block,
+        pool_blocks=pool_blocks, share_prefixes=True, swap_tier=True)
+    for rid, c, prompt, kind, arr in reqs:
+        eng.submit(Request(id=rid, prompt=prompt, max_new_tokens=gen,
+                           arrival_step=arr + offset))
+    t0 = time.perf_counter()
+    done = eng.run(max_steps=4000)
+    wall = time.perf_counter() - t0
+    summ = eng.metrics.summary()
+
+    ledger = FleetLedger()
+    for i, (rid, c, prompt, kind, _) in enumerate(reqs):
+        fin = done[rid]
+        ledger.record(0, c, i, wall_s=fin.ttft_s, kind=kind,
+                      tokens=len(fin.tokens))
+    ttft = ledger.fleet_sketch("wall_s")
+    head = ledger.cluster_sketch(0, "wall_s")
+    admitted = max(summ["requests"], 1)
+    row = {
+        "name": "serving_zipf_trace",
+        "requests": n_req,
+        "clusters": n_clusters,
+        "zipf_exponent": exponent,
+        "head_cluster_size": int(sizes[0]),
+        "cache_len": cache_len,
+        "block_size": block,
+        "pool_blocks": pool_blocks,
+        "slots": slots,
+        "peak_in_flight": summ["peak_in_flight"],
+        "share_hits": summ["share_hits"],
+        "full_prompt_hits": summ["full_prompt_hits"],
+        "share_hit_rate": round(summ["share_hits"] / admitted, 3),
+        "full_hit_rate": round(summ["full_prompt_hits"] / admitted, 3),
+        "swap_outs": summ["swap_outs"],
+        "swap_ins": summ["swap_ins"],
+        "swap_out_rate": round(summ["swap_outs"] / admitted, 3),
+        "evictions": summ["evictions"],
+        "mean_fragmentation": round(summ["mean_fragmentation"], 3),
+        "peak_fragmentation": round(summ["peak_fragmentation"], 3),
+        "ttft_p50_s": round(ttft.quantile(50), 4),
+        "ttft_p99_s": round(ttft.quantile(99), 4),
+        "head_ttft_p99_s": round(head.quantile(99), 4),
+        "tok_per_s": round(
+            sum(len(f.tokens) for f in done.values()) / wall, 2),
+        "unfinished": n_req - len([r for r in reqs if r[0] in done]),
+    }
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    return row
+
+
 def run(full: bool = False):
     from repro.configs import get_smoke_config
     from repro.launch.serve import make_trace
@@ -312,7 +432,8 @@ def run(full: bool = False):
         "greedy_mismatches": mismatches,
     }
     print(",".join(f"{k}={v}" for k, v in row.items()))
-    return [row, _paged_vs_contiguous_case(full), _cluster_skew_case(full)]
+    return [row, _paged_vs_contiguous_case(full), _cluster_skew_case(full),
+            _zipf_trace_case(full)]
 
 
 if __name__ == "__main__":

@@ -196,6 +196,9 @@ def _trace_ring_round(ledger, wire: str) -> None:
     for i, (ax, nbytes) in enumerate(ledger):
         obs.instant("ring.hop", track=f"ring:{ax}", axis=ax, seq=i,
                     nbytes=nbytes, wire=wire)
+        # mergeable sketch, not reservoir: hop-size percentiles stay
+        # aggregatable across processes / trace merges
+        obs.hist("ring.hop_bytes", float(nbytes), sketch=True)
         per_axis[ax] = per_axis.get(ax, 0) + nbytes
     for ax, nbytes in per_axis.items():
         obs.counter(f"ring.wire_bytes.{ax}", nbytes)

@@ -18,6 +18,10 @@ objects with ``prompt`` or ``prompt_len``, ``max_new_tokens``, and optional
 ``--trace-out PATH`` dumps the run's ``repro.obs`` span timeline (request
 lifecycles, engine decode steps, pool-utilization counters) as Chrome
 trace-event JSON — open it at https://ui.perfetto.dev or chrome://tracing.
+``--flight-out PATH`` arms the post-mortem flight recorder instead: the
+last-N-events ring is written there at exit, on unhandled exception, and
+on engine distress (park-storm, eviction) — cheap enough to leave on in
+runs where the full tracer is off.
 """
 
 from __future__ import annotations
@@ -117,6 +121,8 @@ def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
               f"peak in-flight {summ['peak_in_flight']}, "
               f"parked {summ['parked_events']}, "
               f"evicted {summ['evictions']}, "
+              f"fragmentation {summ['mean_fragmentation']:.2f} mean / "
+              f"{summ['peak_fragmentation']:.2f} peak, "
               f"compiled serve_step signatures: "
               f"{engine.num_step_signatures()}")
         if engine.paged and (engine.share_prefixes or engine.swap_tier):
@@ -240,7 +246,16 @@ def main() -> None:
     ap.add_argument("--trace-out", default="",
                     help="write the repro.obs span timeline as Chrome "
                          "trace-event JSON (Perfetto / chrome://tracing)")
+    ap.add_argument("--flight-out", default="",
+                    help="arm the crash-dump flight recorder: write the "
+                         "last-N-events ring here at exit / on exception / "
+                         "on engine distress (park-storm, evict) — works "
+                         "with REPRO_TRACE=0")
     args = ap.parse_args()
+
+    if args.flight_out:
+        import os
+        os.environ["REPRO_FLIGHT_OUT"] = args.flight_out
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     print(f"decode path: {ops.decode_mode()}")

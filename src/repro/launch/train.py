@@ -8,8 +8,11 @@ TPU slice drop --smoke and point --mesh at the production topology (the
 same step functions the dry-run lowers are used verbatim).
 
 ``--trace-out PATH`` dumps the ``repro.obs`` timeline (per-step
-``train.step`` spans via ``jax.profiler.StepTraceAnnotation``, loss gauge)
-as Chrome trace-event JSON for Perfetto / chrome://tracing.
+``train.step`` spans via ``jax.profiler.StepTraceAnnotation``, loss gauge,
+device-memory watermarks) as Chrome trace-event JSON for Perfetto /
+chrome://tracing.  ``--scope-costs`` prints the per-``obs.*``-named-scope
+FLOP/byte attribution of the compiled step (``repro.obs.devmem``) — which
+kernel owns the step's cost, straight from the HLO.
 """
 
 from __future__ import annotations
@@ -60,6 +63,9 @@ def main() -> None:
     ap.add_argument("--trace-out", default="",
                     help="write the repro.obs span timeline as Chrome "
                          "trace-event JSON (Perfetto / chrome://tracing)")
+    ap.add_argument("--scope-costs", action="store_true",
+                    help="print per-obs.* named-scope FLOP/byte attribution "
+                         "of the compiled train step")
     args = ap.parse_args()
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -83,6 +89,20 @@ def main() -> None:
 
     jitted = jax.jit(step_fn, donate_argnums=(0, 1))
     with mesh:
+        if args.scope_costs:
+            # undonated lower: attribution only, params survive for the loop
+            batch = synth_batch(cfg, args.batch, args.seq, it)
+            compiled = jax.jit(step_fn).lower(
+                params, opt, batch, jnp.asarray(0, jnp.int32)).compile()
+            costs = obs.devmem.compiled_scope_costs(compiled)
+            if costs:
+                total_f = sum(v["flops"] for v in costs.values()) or 1.0
+                print("per-scope HLO cost attribution (compiled step):")
+                for scope, v in sorted(costs.items(),
+                                       key=lambda kv: -kv[1]["flops"]):
+                    print(f"  {scope:<28} flops={v['flops']:.3e} "
+                          f"({v['flops'] / total_f:5.1%})  "
+                          f"bytes={v['bytes']:.3e}")
         t0 = time.time()
         for i in range(args.steps):
             batch = synth_batch(cfg, args.batch, args.seq, it)
@@ -97,6 +117,8 @@ def main() -> None:
                 tok_s = args.batch * args.seq * (i + 1) / dt
                 print(f"step {i + 1}/{args.steps} loss={loss:.4f} "
                       f"({tok_s:.0f} tok/s)", flush=True)
+                if obs.enabled():
+                    obs.watermark("train.step")   # devmem track, sampled
     print("done")
     if args.trace_out:
         from repro.obs import bench_gate

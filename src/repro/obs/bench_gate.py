@@ -63,18 +63,61 @@ def provenance() -> dict:
         device_kind = jax.devices()[0].device_kind
     except Exception:                           # pragma: no cover
         jax_v = jaxlib_v = backend = device_kind = "unknown"
+    try:
+        from repro.obs import devmem
+        peak = devmem.peak_bytes()
+    except Exception:                           # pragma: no cover
+        peak = 0
     return {
         "git_sha": sha,
         "jax": jax_v,
         "jaxlib": jaxlib_v,
         "backend": backend,
         "device_kind": device_kind,
+        # allocator peak where the backend tracks it, live-buffer footprint
+        # otherwise — BENCH speedups carry their memory watermark
+        "device_peak_bytes": peak,
         "python": sys.version.split()[0],
         "platform": platform.platform(),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "env": {k: v for k, v in sorted(os.environ.items())
                 if k.startswith("REPRO_") or k == "XLA_FLAGS"},
     }
+
+
+# fields whose baseline/current mismatch makes gate comparisons bogus
+_DRIFT_FIELDS = ("backend", "device_kind")
+
+
+def load_provenance(suite: str, root: str = ".") -> Optional[dict]:
+    path = bench_path(suite, root)
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f).get("provenance")
+    except (OSError, ValueError):
+        return None
+
+
+def provenance_drift(baseline: Optional[dict],
+                     current: Optional[dict] = None) -> List[str]:
+    """Warnings (NOT failures) when a committed baseline was measured on a
+    different backend/device than the current run — a CPU baseline gated
+    against a GPU run produces bogus "regressions", and vice versa.  The
+    gate still runs (absolute bounds stay meaningful); the warnings tell
+    the reader which relative comparisons to distrust."""
+    if not baseline:
+        return []
+    current = current or provenance()
+    out = []
+    for f in _DRIFT_FIELDS:
+        b, c = baseline.get(f, "unknown"), current.get(f, "unknown")
+        if b != c and "unknown" not in (b, c):
+            out.append(f"provenance drift: baseline {f}={b!r} but this "
+                       f"run has {f}={c!r} — relative gates are "
+                       f"cross-{f} and may be bogus")
+    return out
 
 
 def merge_rows(old_rows: Sequence[dict],
@@ -177,6 +220,12 @@ GATES: Dict[str, List[GateSpec]] = {
                  "greedy_mismatches", "exact"),
         GateSpec({"name": "serving_shared_prefix"},
                  "serve_step_signatures", "exact"),
+        # Zipf fleet trace: admission outcomes are scheduling-deterministic
+        # — the head cluster's replays must keep sharing, every request
+        # must finish
+        GateSpec({"name": "serving_zipf_trace"},
+                 "share_hit_rate", "higher", rel_tol=0.0, bound=0.5),
+        GateSpec({"name": "serving_zipf_trace"}, "unfinished", "exact"),
     ],
     "collectives": [
         # wire-byte fractions are exact chunk-plan arithmetic: zero tol

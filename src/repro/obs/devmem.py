@@ -1,0 +1,183 @@
+"""Device-memory watermarks and per-scope HLO cost attribution.
+
+Two attribution gaps closed here:
+
+  * **Where did the memory go?**  :func:`memory_snapshot` reads
+    ``device.memory_stats()`` (bytes in use / peak / limit) where the
+    backend exposes it, and falls back to live-buffer accounting
+    (``jax.live_arrays()`` nbytes summed per device) on backends that
+    don't (CPU).  :func:`watermark` samples a snapshot onto the tracer as
+    a ``devmem`` counter track + gauges, and the trainer/engine call it at
+    round and step boundaries.  :func:`peak_bytes` feeds
+    ``bench_gate.provenance`` so committed BENCH rows carry the memory
+    watermark alongside the speedups they claim.
+  * **Which scope is the cost?**  PR 6 stamps ``jax.named_scope("obs.*")``
+    around every kernel dispatch and ring hop; XLA threads those through
+    compilation as ``metadata={op_name="jit(f)/.../obs.qlora_matmul/..."}``
+    on each HLO op.  :func:`scope_costs` re-parses compiled HLO text with
+    the scan-aware walk from ``launch/hlo_cost.py`` (trip-count-aware
+    multiplicities, fusion-boundary byte semantics) and buckets FLOPs and
+    bytes by the innermost ``obs.*`` path segment — so "what fraction of
+    step FLOPs is flash attention vs the qLoRA matmul" is one dict lookup
+    instead of an HLO spelunking session.
+
+Everything here degrades gracefully: no device stats → live-buffer
+fallback; no ``obs.*`` metadata in the module → costs land under
+``"(unscoped)"``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+__all__ = ["memory_snapshot", "peak_bytes", "watermark", "scope_costs",
+           "compiled_scope_costs"]
+
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+_SCOPE_RE = re.compile(r"(obs\.[\w\-]+)")
+
+UNSCOPED = "(unscoped)"
+
+
+# -- device memory watermarks -------------------------------------------------
+
+def memory_snapshot(device=None) -> Dict[str, int]:
+    """Best-effort memory stats for one device (default: first device).
+
+    Returns ``{"bytes_in_use", "peak_bytes_in_use", "bytes_limit",
+    "live_buffer_bytes", "live_buffers"}`` — zeros where the backend keeps
+    quiet.  ``memory_stats()`` is authoritative when present (GPU/TPU);
+    ``live_buffer_bytes`` is the fallback accounting (and a useful
+    cross-check even when stats exist: stats include allocator slack,
+    live buffers don't)."""
+    import jax
+
+    if device is None:
+        device = jax.devices()[0]
+    out = {"bytes_in_use": 0, "peak_bytes_in_use": 0, "bytes_limit": 0,
+           "live_buffer_bytes": 0, "live_buffers": 0}
+    stats = None
+    try:
+        stats = device.memory_stats()
+    except Exception:       # backend without stats support
+        stats = None
+    if stats:
+        out["bytes_in_use"] = int(stats.get("bytes_in_use", 0))
+        out["peak_bytes_in_use"] = int(stats.get("peak_bytes_in_use", 0))
+        out["bytes_limit"] = int(stats.get("bytes_limit", 0))
+    try:
+        for arr in jax.live_arrays():
+            devs = getattr(arr, "devices", None)
+            if devs is not None and device not in devs():
+                continue
+            out["live_buffer_bytes"] += int(arr.nbytes)
+            out["live_buffers"] += 1
+    except Exception:       # pragma: no cover - deleted-array races
+        pass
+    return out
+
+
+def peak_bytes(device=None) -> int:
+    """The provenance number: allocator peak when the backend tracks it,
+    else the current live-buffer footprint (a lower bound, clearly labelled
+    by ``bench_gate.provenance`` carrying the backend name alongside)."""
+    snap = memory_snapshot(device)
+    return snap["peak_bytes_in_use"] or snap["live_buffer_bytes"]
+
+
+def watermark(tag: str, device=None) -> Dict[str, int]:
+    """Sample a snapshot onto the tracer: one ``devmem`` counter-track
+    point plus ``devmem.<tag>.*`` gauges (gauges keep the per-tag peak via
+    the tracer's max semantics).  Returns the snapshot so call sites can
+    also log it."""
+    from repro import obs
+
+    snap = memory_snapshot(device)
+    in_use = snap["bytes_in_use"] or snap["live_buffer_bytes"]
+    obs.counter_track("devmem", bytes_in_use=in_use,
+                      live_buffers=snap["live_buffers"])
+    obs.gauge(f"devmem.{tag}.bytes_in_use", float(in_use))
+    if snap["peak_bytes_in_use"]:
+        obs.gauge(f"devmem.{tag}.peak_bytes", float(snap["peak_bytes_in_use"]))
+    return snap
+
+
+# -- per-scope HLO cost attribution -------------------------------------------
+
+def scope_costs(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Bucket trip-count-aware FLOPs/bytes by ``obs.*`` named scope.
+
+    Reuses the ``launch/hlo_cost`` parser: same multiplicity walk (a scan
+    body's ops count trip_count times), same byte semantics (fusion bodies
+    contribute at their call boundary — a fusion op inherits the scope of
+    its own ``op_name``).  Ops whose metadata carries no ``obs.*`` segment
+    aggregate under ``"(unscoped)"``.  Scope key is the innermost ``obs.*``
+    segment of the op_name path, so nested scopes attribute to the nearest
+    annotation — the one a reader of the source would expect."""
+    from collections import defaultdict
+
+    from repro.launch import hlo_cost as hc
+
+    comps, entry, types = hc.parse_module(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    fusion_bodies = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                for cname, _ in op.callees:
+                    fusion_bodies.add(cname)
+
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    for cname in hc._topo_order(comps, entry):
+        m = mult[cname]
+        if m == 0 or cname not in comps:
+            continue
+        for op in comps[cname].ops:
+            for callee, k in op.callees:
+                if callee in comps:
+                    mult[callee] += m * k
+
+    out: Dict[str, Dict[str, float]] = {}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            scope = _op_scope(op.raw)
+            bucket = out.setdefault(
+                scope, {"flops": 0.0, "bytes": 0.0, "ops": 0.0})
+            bucket["ops"] += m
+            if op.kind in ("dot", "dot-general"):
+                bucket["flops"] += m * hc._dot_flops(op, types)
+            if not in_fusion and op.kind not in hc._SKIP_BYTES_OPS:
+                b = hc._type_bytes(op.result_type)
+                for o in op.operands:
+                    t = types.get(o)
+                    if t:
+                        b += hc._type_bytes(t)
+                bucket["bytes"] += m * b
+    return out
+
+
+def _op_scope(raw_line: str) -> str:
+    m = _OP_NAME_RE.search(raw_line)
+    if not m:
+        return UNSCOPED
+    scopes = _SCOPE_RE.findall(m.group(1))
+    return scopes[-1] if scopes else UNSCOPED
+
+
+def compiled_scope_costs(compiled) -> Optional[Dict[str, Dict[str, float]]]:
+    """Scope costs straight from a lowered-and-compiled function (the
+    object ``jax.jit(f).lower(...).compile()`` returns).  ``None`` when the
+    runtime won't hand back HLO text."""
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        return None
+    return scope_costs(hlo)

@@ -27,6 +27,18 @@ instrumentation can stay in hot paths unconditionally.  ``REPRO_TRACE_OUT=
 path.json`` dumps the default tracer's Chrome trace at interpreter exit;
 launchers expose the same via ``--trace-out``.
 
+Even with the tracer off, the **flight recorder** (``repro.obs.flight``)
+passively retains the last N span/instant/counter events in a fixed ring —
+one tuple append per event — so a crash or an engine distress signal can
+still dump a post-mortem timeline.  ``REPRO_FLIGHT=0`` disables that too,
+restoring the pure no-op path.
+
+Unbounded streams that must AGGREGATE across processes/clients use
+``hist(name, v, sketch=True)``: the sample lands in a mergeable
+``repro.obs.sketch.QuantileSketch`` instead of the reservoir ``Histogram``
+(reservoirs cannot merge without re-biasing; sketches merge associatively
+— the fleet ledger's per-cluster -> fleet roll-up depends on it).
+
 Virtual tracks: pass ``track="req:r0"`` to pin events to a named Perfetto
 track (one per request, one per federated cluster, ...) instead of the
 calling thread's track.
@@ -41,6 +53,9 @@ import random
 import threading
 import time
 from typing import Any, Dict, List, Optional
+
+from repro.obs import flight as _flight
+from repro.obs.sketch import QuantileSketch
 
 __all__ = [
     "Tracer", "Histogram", "get_tracer", "trace_enabled", "span",
@@ -151,6 +166,32 @@ class _NullSpan:
 
 
 _NULL_SPAN = _NullSpan()
+
+
+class _FlightSpan:
+    """Span surrogate for the disabled-tracer path: records nothing in the
+    tracer, but stamps the interval into the flight recorder's ring (one
+    tuple append) so post-mortem dumps have a timeline even under
+    ``REPRO_TRACE=0``."""
+    __slots__ = ("name", "cat", "track", "args", "t0")
+
+    def __init__(self, name: str, cat: str, track: Optional[str],
+                 args: Dict[str, Any]):
+        self.name = name
+        self.cat = cat
+        self.track = track
+        self.args = args
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t0 = self.t0
+        _flight.get_flight().record("X", self.name, self.cat, t0,
+                                    time.perf_counter() - t0, self.track,
+                                    self.args)
+        return False
 
 
 class _Span:
@@ -274,6 +315,9 @@ class Tracer:
                         "dur": max(self._us(t1) - self._us(t0), 0.0),
                         "pid": 0, "tid": self._tid(track),
                         "args": args or {}})
+        if _flight.flight_enabled():
+            _flight.get_flight().record("X", name, cat, t0, t1 - t0,
+                                        track, args)
 
     # -- spans / events ------------------------------------------------------
 
@@ -284,12 +328,16 @@ class Tracer:
         with the XLA device trace under the JAX profiler; ``track`` pins
         the span to a named virtual track instead of the calling thread."""
         if not trace_enabled():
+            if _flight.flight_enabled():
+                return _FlightSpan(name, cat, track, args)
             return _NULL_SPAN
         return _Span(self, name, cat, device, track, args)
 
     def step_span(self, name: str, step: int, **args):
         """``span`` + ``jax.profiler.StepTraceAnnotation(step_num=step)``."""
         if not trace_enabled():
+            if _flight.flight_enabled():
+                return _FlightSpan(name, "step", None, args)
             return _NULL_SPAN
         args.setdefault("step", step)
         return _StepSpan(self, name, step, args)
@@ -299,28 +347,45 @@ class Tracer:
         """Retroactive span from ``time.perf_counter()`` stamps already in
         hand (request lifecycle phases the engine times anyway)."""
         if not trace_enabled():
+            if _flight.flight_enabled():
+                _flight.get_flight().record("X", name, cat, t0, t1 - t0,
+                                            track, args)
             return
         self._complete(name, cat, t0, t1, track, args)
 
     def instant(self, name: str, cat: str = "", track: Optional[str] = None,
                 **args) -> None:
         if not trace_enabled():
+            if _flight.flight_enabled():
+                _flight.get_flight().record("i", name, cat,
+                                            time.perf_counter(),
+                                            track=track, args=args)
             return
         with self._lock:
             self._push({"name": name, "cat": cat or "repro", "ph": "i",
                         "ts": self._us(time.perf_counter()), "s": "t",
                         "pid": 0, "tid": self._tid(track),
                         "args": args or {}})
+        if _flight.flight_enabled():
+            _flight.get_flight().record("i", name, cat, time.perf_counter(),
+                                        track=track, args=args)
 
     def counter_track(self, name: str, **series: float) -> None:
         """One ``"C"`` sample on the named counter track (Perfetto renders
         the series as a stacked step chart)."""
-        if not trace_enabled():
+        traced = trace_enabled()
+        if not traced and not _flight.flight_enabled():
+            return
+        series_f = {k: float(v) for k, v in series.items()}
+        if _flight.flight_enabled():
+            _flight.get_flight().record("C", name, "repro",
+                                        time.perf_counter(), args=series_f)
+        if not traced:
             return
         with self._lock:
             self._push({"name": name, "cat": "repro", "ph": "C",
                         "ts": self._us(time.perf_counter()), "pid": 0,
-                        "args": {k: float(v) for k, v in series.items()}})
+                        "args": series_f})
 
     # -- aggregates ----------------------------------------------------------
 
@@ -338,15 +403,28 @@ class Tracer:
         with self._lock:
             self.gauges[name] = float(value)
 
-    def hist(self, name: str, value: float) -> None:
-        """Histogram sample (latencies); percentiles via ``summary()``."""
+    def hist(self, name: str, value: float, *, sketch: bool = False) -> None:
+        """Histogram sample (latencies); percentiles via ``summary()``.
+
+        ``sketch=True`` binds the name to a mergeable
+        :class:`~repro.obs.sketch.QuantileSketch` instead of the reservoir
+        ``Histogram`` — use it for unbounded streams that must aggregate
+        across clients/processes (the first call for a name picks the
+        representation; both expose ``add``/``percentile``/``summary``)."""
         if not trace_enabled():
             return
         with self._lock:
             h = self.hists.get(name)
             if h is None:
-                h = self.hists[name] = Histogram()
+                h = self.hists[name] = (QuantileSketch() if sketch
+                                        else Histogram())
             h.add(value)
+
+    def sketch(self, name: str) -> Optional[QuantileSketch]:
+        """The sketch bound to ``name`` by ``hist(..., sketch=True)``, or
+        None (absent, or reservoir-bound)."""
+        h = self.hists.get(name)
+        return h if isinstance(h, QuantileSketch) else None
 
     # -- inspection / export -------------------------------------------------
 
@@ -430,8 +508,8 @@ def gauge(name: str, value: float) -> None:
     _TRACER.gauge(name, value)
 
 
-def hist(name: str, value: float) -> None:
-    _TRACER.hist(name, value)
+def hist(name: str, value: float, *, sketch: bool = False) -> None:
+    _TRACER.hist(name, value, sketch=sketch)
 
 
 def counter_track(name: str, **series: float) -> None:

@@ -164,6 +164,16 @@ class CachePool(_LanePool):
     def blocks_in_use(self) -> int:
         return self.num_slots - len(self._free)
 
+    @property
+    def fragmentation(self) -> float:
+        """Contiguous lanes can't fragment: always 0 (uniform metrics
+        interface with the paged pool)."""
+        return 0.0
+
+    @property
+    def free_runs(self) -> int:
+        return 1 if self._free else 0
+
     # -- data path ----------------------------------------------------------
 
     def insert(self, req_cache, slot: int) -> None:
@@ -203,6 +213,29 @@ class BlockAllocator:
     @property
     def used_blocks(self) -> int:
         return len(self._used)
+
+    @property
+    def free_runs(self) -> int:
+        """Maximal runs of consecutive block ids in the free list (order
+        ignored: the LIFO list is a set for adjacency purposes).  One run
+        = perfectly coalesced; ``free_blocks`` runs = fully shredded."""
+        if not self._free:
+            return 0
+        ids = sorted(self._free)
+        return 1 + sum(1 for a, b in zip(ids, ids[1:]) if b != a + 1)
+
+    @property
+    def fragmentation(self) -> float:
+        """Free-list shredding in [0, 1]: ``(runs - 1) / (free - 1)``.
+        0 when the free space is one contiguous run (or ≤ 1 block free),
+        1 when every free block is an island.  Block granularity makes
+        this cosmetic for *allocation* (any free block serves any ask) but
+        it tracks how interleaved lane lifetimes have scrambled the pool —
+        the locality signal for the gather/scatter paths."""
+        free = len(self._free)
+        if free <= 1:
+            return 0.0
+        return (self.free_runs - 1) / (free - 1)
 
     def refcount(self, block: int) -> int:
         return self._ref.get(block, 0)
@@ -400,6 +433,14 @@ class PagedCachePool(_LanePool):
     @property
     def free_blocks(self) -> int:
         return self.allocator.free_blocks
+
+    @property
+    def free_runs(self) -> int:
+        return self.allocator.free_runs
+
+    @property
+    def fragmentation(self) -> float:
+        return self.allocator.fragmentation
 
     def blocks_for(self, extent: int) -> int:
         """Blocks covering ring slots [0, extent) — admission cost of a

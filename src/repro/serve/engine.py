@@ -500,6 +500,9 @@ class ForecastEngine:
             victim = max(parked, key=lambda i: (
                 self.slots[i].admitted_step,
                 self._seq.get(self.slots[i].request.id, 0)))
+            # park-storm: nothing runnable, a lane is being displaced —
+            # snapshot the flight recorder before state changes further
+            obs.flight_maybe_dump("engine.park_storm")
             if self.swap_tier:
                 victims.append(self._swap_out(victim))
             else:
@@ -558,6 +561,7 @@ class ForecastEngine:
         obs.instant("req.evict", track=f"req:{st.request.id}",
                     id=st.request.id, slot=slot,
                     generated=len(st.generated))
+        obs.flight_maybe_dump("engine.evict")
         return resumed
 
     # -- swap tier ------------------------------------------------------------
@@ -646,9 +650,14 @@ class ForecastEngine:
         self.metrics.record_decode_step(
             len(active), len(active), time.perf_counter() - t0,
             in_flight=self.active_requests,
-            blocks_in_use=self.pool.blocks_in_use)
+            blocks_in_use=self.pool.blocks_in_use,
+            fragmentation=self.pool.fragmentation)
         obs.counter_track("pool", blocks_in_use=self.pool.blocks_in_use,
-                          active_lanes=len(active))
+                          active_lanes=len(active),
+                          free_runs=self.pool.free_runs,
+                          fragmentation=self.pool.fragmentation)
+        if obs.enabled() and self.step_count % 16 == 0:
+            obs.watermark("engine.decode")     # devmem track, sampled
         now = time.perf_counter()
         for i in active:
             st = self.slots[i]

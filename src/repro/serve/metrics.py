@@ -49,6 +49,10 @@ Summary fields
 ``cow_copies``/``cow_bytes``       copy-on-write block copies / bytes moved
 ``swap_outs``/``swap_out_bytes``   lanes swapped to host / HBM bytes freed
 ``swap_ins``/``swap_in_bytes``     lanes restored from host / bytes refilled
+``mean_fragmentation``    mean free-list shredding per step ((runs−1)/
+                          (free−1) from ``BlockAllocator``; 0 contiguous,
+                          1 fully shredded)
+``peak_fragmentation``    worst per-step fragmentation observed
 """
 
 from __future__ import annotations
@@ -86,6 +90,8 @@ class EngineMetrics:
     swap_out_bytes: int = 0
     swap_ins: int = 0
     swap_in_bytes: int = 0
+    frag_sum: float = 0.0                     # sum over steps of pool frag
+    peak_fragmentation: float = 0.0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     ttft_hist: Histogram = dataclasses.field(default_factory=Histogram)
     itl_hist: Histogram = dataclasses.field(default_factory=Histogram)
@@ -98,7 +104,8 @@ class EngineMetrics:
 
     def record_decode_step(self, active: int, tokens_out: int,
                            elapsed_s: float, *, in_flight: int = 0,
-                           blocks_in_use: int = 0) -> None:
+                           blocks_in_use: int = 0,
+                           fragmentation: float = 0.0) -> None:
         """One batched decode step: ``active`` lanes produced
         ``tokens_out`` tokens in ``elapsed_s`` wall seconds."""
         if self.decode_steps == 0:
@@ -112,6 +119,8 @@ class EngineMetrics:
         self.decode_tokens += tokens_out
         self.occupancy_sum += active / max(self.num_slots, 1)
         self.block_util_sum += blocks_in_use / max(self.pool_blocks, 1)
+        self.frag_sum += fragmentation
+        self.peak_fragmentation = max(self.peak_fragmentation, fragmentation)
         self.peak_in_flight = max(self.peak_in_flight, in_flight or active)
         self.last_event_at = time.perf_counter()
 
@@ -197,4 +206,7 @@ class EngineMetrics:
             "swap_out_bytes": self.swap_out_bytes,
             "swap_ins": self.swap_ins,
             "swap_in_bytes": self.swap_in_bytes,
+            "mean_fragmentation": (self.frag_sum / self.decode_steps
+                                   if self.decode_steps else 0.0),
+            "peak_fragmentation": self.peak_fragmentation,
         }

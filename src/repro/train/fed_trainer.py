@@ -28,13 +28,30 @@ the round-over-round aggregated-adapter movement in per-cluster
 convergence signal heterogeneous-client work diagnoses stragglers
 against), and the metered comm in ``fed.wire_bytes`` /
 ``fed.round_loss.cluster<c>``.
+
+Fleet ledger (always on — one dataclass append per client fit): every fit
+lands a :class:`repro.obs.fleet.ClientRecord` (wall time, wire bytes,
+EF-residual norm, adapter-delta norm, staleness) in
+``FedResult.fleet``; excluded stragglers are recorded with
+``participated=False`` so exclusion is auditable.  The ledger's
+per-cluster summed wire bytes equal ``comm.fedtime_round(...).bytes_up``
+exactly — each participating client contributes precisely
+``comm.wire_payload_bytes(count_params(adapters), wire)``, the same
+single source every other view of the number reads (the PR 5/6 "one
+number" invariant, now five ways).  ``fleet_out=`` (or
+``REPRO_FLEET_OUT``) writes the standalone ``fleet.json``;
+``slow_clients={id: seconds}`` injects deterministic slowdowns for
+straggler-detection tests; device-memory watermarks are sampled at round
+boundaries when tracing is on.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, List, Optional
+import os
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +84,7 @@ class FedResult:
     logs: List[RoundLog]
     assignments: np.ndarray
     trainable_frac: float
+    fleet: Optional[obs.FleetLedger] = None
 
     def total_megabytes(self) -> float:
         return sum(l.comm.megabytes for l in self.logs)
@@ -90,6 +108,8 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                   straggler_prob: float = 0.0,
                   secure_aggregation: bool = False,
                   wire: Optional[str] = None,
+                  slow_clients: Optional[Dict[int, float]] = None,
+                  fleet_out: Optional[str] = None,
                   progress: Optional[Callable[[str], None]] = None
                   ) -> FedResult:
     """client_data: list of (x (n,L,M), y (n,T,M)) per client."""
@@ -128,6 +148,11 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
     logs: List[RoundLog] = []
     rng = np.random.default_rng(7)
     wire_residuals: dict = {}     # client -> flat EF residual across rounds
+    ledger = obs.FleetLedger()
+    # the per-client upload: same single source fedtime_round prices, so
+    # the ledger's per-cluster sums match stats.bytes_up exactly
+    client_wire_bytes = comm.wire_payload_bytes(
+        comm.count_params(adapters0), wire)
 
     for r in range(rounds):
         for c in range(ft.num_clusters):
@@ -144,6 +169,10 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                     alive = sel[:1]               # quorum of one
             else:
                 alive = sel
+            alive_set = {int(s) for s in alive}
+            for s in sel:
+                if int(s) not in alive_set:       # missed the round deadline
+                    ledger.record(r, c, int(s), participated=False)
             round_span = obs.span("fed.round", track=f"fed:cluster{c}",
                                   round=r, cluster=c, clients=len(alive),
                                   stragglers=int(take - len(alive)),
@@ -154,12 +183,18 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                 x, y = client_data[s]
                 batches = _stack_batches(x, y, ft.local_steps, batch_size,
                                          seed=1000 * r + int(s))
+                fit_t0 = time.perf_counter()
                 with obs.span("fed.client_fit", track=f"fed:cluster{c}",
                               client=int(s), cluster=c, round=r,
                               steps=ft.local_steps):
+                    if slow_clients and int(s) in slow_clients:
+                        # injected systems heterogeneity (tests pin the
+                        # ledger's straggler flagging on these)
+                        time.sleep(slow_clients[int(s)])
                     ad, l = local_update(loss_fn, params,
                                          servers[c].adapters,
                                          batches, steps=ft.local_steps)
+                ef = 0.0
                 if wire != "f32":
                     # the upload is the adapter DELTA through the wire:
                     # encode (+ carried residual), and hand the server the
@@ -172,14 +207,22 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                     ad = jax.tree.map(
                         lambda g, d: g.astype(jnp.float32) + d,
                         servers[c].adapters, dq)
+                    # carried EF residual norm: the quantization error
+                    # this client drags into its next round
+                    ef = float(jnp.linalg.norm(wire_residuals[int(s)]))
                     if obs.enabled():
-                        # carried EF residual norm: the quantization error
-                        # this client drags into its next round
-                        ef = float(jnp.linalg.norm(
-                            wire_residuals[int(s)]))
                         obs.gauge(f"fed.ef_residual_norm.client{int(s)}",
                                   ef)
                         obs.hist("fed.ef_residual_norm", ef)
+                client_dn = float(jnp.sqrt(sum(
+                    jnp.sum((a.astype(jnp.float32) -
+                             b.astype(jnp.float32)) ** 2)
+                    for a, b in zip(jax.tree.leaves(ad),
+                                    jax.tree.leaves(servers[c].adapters)))))
+                ledger.record(r, c, int(s),
+                              wall_s=time.perf_counter() - fit_t0,
+                              wire_bytes=client_wire_bytes, ef_norm=ef,
+                              delta_norm=client_dn, t0=fit_t0)
                 updates.append(ad)
                 losses.append(float(l))
                 ws.append(weights_all[s])
@@ -230,9 +273,16 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                 progress(f"round {r} cluster {c}: "
                          f"loss={np.mean(losses):.4f} "
                          f"comm={stats.megabytes:.2f}MB")
+        if obs.enabled():
+            # device-memory watermark at the round boundary (devmem track)
+            obs.watermark(f"fed.round{r}")
 
+    ledger.to_trace()
+    fleet_out = fleet_out or os.environ.get("REPRO_FLEET_OUT")
+    if fleet_out:
+        ledger.dump(fleet_out)
     return FedResult([s.adapters for s in servers], params, logs,
-                     assign, frac)
+                     assign, frac, fleet=ledger)
 
 
 # ---------------------------------------------------------------------------

@@ -129,3 +129,38 @@ def test_provenance_has_toolchain_fields():
         assert k in p, k
     assert isinstance(p["env"], dict)
     assert p["jax"] != "unknown"               # jax is installed here
+
+
+def test_provenance_carries_device_peak_bytes():
+    p = bench_gate.provenance()
+    assert "device_peak_bytes" in p and p["device_peak_bytes"] >= 0
+
+
+def test_provenance_drift_warns_on_cross_device_baseline():
+    cur = {"backend": "cpu", "device_kind": "cpu"}
+    # identical: silent
+    assert bench_gate.provenance_drift(dict(cur), cur) == []
+    # missing / unreadable baseline: silent (first run of a suite)
+    assert bench_gate.provenance_drift(None, cur) == []
+    assert bench_gate.provenance_drift({}, cur) == []
+    # cross-device baseline: one warning per drifted field, not a failure
+    base = {"backend": "gpu", "device_kind": "NVIDIA H100"}
+    warns = bench_gate.provenance_drift(base, cur)
+    assert len(warns) == 2
+    assert any("backend='gpu'" in w and "backend='cpu'" in w for w in warns)
+    assert any("device_kind" in w for w in warns)
+    # "unknown" on either side suppresses the warning (stripped container)
+    assert bench_gate.provenance_drift(
+        {"backend": "unknown", "device_kind": "cpu"}, cur) == []
+
+
+def test_load_provenance_reads_committed_bench(tmp_path):
+    root = str(tmp_path)
+    bench_gate.write_bench("kernels", [{"name": "a", "v": 1}],
+                           full=False, root=root)
+    prov = bench_gate.load_provenance("kernels", root)
+    assert prov and prov["backend"] == bench_gate.provenance()["backend"]
+    assert bench_gate.load_provenance("serving", root) is None
+    bad = tmp_path / "BENCH_collectives.json"
+    bad.write_text("{not json")
+    assert bench_gate.load_provenance("collectives", root) is None

@@ -1,0 +1,359 @@
+"""Fleet-scale telemetry: the per-client round ledger (staleness clock,
+wire-byte roll-up, two-rule straggler flagging, fleet.json schema), the
+crash-dump flight recorder (ring semantics, tracer-off capture, forced
+eviction post-mortem), device-memory snapshots, and per-scope HLO cost
+attribution.  Includes the ISSUE acceptance run: a 64-client federated fit
+whose per-cluster summed wire bytes equal the comm accounting exactly and
+whose injected slow client is flagged as a straggler."""
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_smoke_config
+from repro.obs import devmem
+from repro.obs import flight as flight_mod
+from repro.obs.fleet import SCHEMA, FleetLedger
+from repro.obs.flight import FlightRecorder
+
+
+# ---------------------------------------------------------------------------
+# ledger unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_staleness_clock_only_advances_on_participation():
+    led = FleetLedger()
+    assert led.record(0, 0, 7).staleness == 0          # first sighting
+    assert led.record(1, 0, 7).staleness == 1
+    # excluded in rounds 2-3: records exist, clock does NOT advance
+    assert led.record(2, 0, 7, participated=False).staleness == 1
+    assert led.record(3, 0, 7, participated=False).staleness == 2
+    assert led.record(4, 0, 7).staleness == 3          # aged while excluded
+    assert led.record(5, 0, 7).staleness == 1
+
+
+def test_wire_byte_rollup_per_cluster_and_round():
+    led = FleetLedger()
+    for r in range(2):
+        for cl, clients in ((0, (0, 1)), (1, (2, 3, 4))):
+            for c in clients:
+                led.record(r, cl, c, wire_bytes=100)
+    led.record(1, 0, 9, wire_bytes=100, participated=False)  # skipped: free
+    assert led.wire_bytes_by_cluster() == {0: 400, 1: 600}
+    assert led.wire_bytes_by_cluster(round=1) == {0: 200, 1: 300}
+    assert led.total_wire_bytes() == 1000
+    assert led.clusters == [0, 1]
+
+
+def test_straggler_rules_fire_separately_and_together():
+    led = FleetLedger()
+    # cluster 0: p99-only — huge outlier but zero MAD (identical peers)
+    for i, w in enumerate([1.0, 1.0, 1.0, 1.0, 10.0]):
+        led.record(0, 0, i, wall_s=w)
+    # cluster 1: mad-only — tight spread, outlier below 2x median
+    for i, w in enumerate([0.98, 1.0, 1.0, 1.02, 1.5]):
+        led.record(0, 1, 10 + i, wall_s=w)
+    # cluster 2: too few fits (<4): never flagged, however extreme
+    for i, w in enumerate([1.0, 100.0]):
+        led.record(0, 2, 20 + i, wall_s=w)
+    flags = {(r.cluster, r.client): why for r, why in led.stragglers()}
+    assert flags == {(0, 4): "p99", (1, 14): "mad"}
+    # cluster 3: both rules — spread cluster with a >2x-median monster
+    for i, w in enumerate([1.0, 1.1, 0.9, 1.05, 0.95, 8.0]):
+        led.record(0, 3, 30 + i, wall_s=w)
+    flags = {(r.cluster, r.client): why for r, why in led.stragglers()}
+    assert flags[(3, 35)] == "p99+mad"
+
+
+def test_fleet_sketch_is_merge_of_cluster_sketches():
+    led = FleetLedger()
+    rng = np.random.default_rng(5)
+    vals = []
+    for c in range(3):
+        for i in range(200):
+            w = float(rng.lognormal())
+            led.record(0, c, c * 1000 + i, wall_s=w)
+            vals.append(w)
+    direct = led.cluster_sketch(0, "wall_s").copy()
+    direct.merge(led.cluster_sketch(1)).merge(led.cluster_sketch(2))
+    fleet = led.fleet_sketch("wall_s")
+    assert fleet.count == 600
+    for q in (50, 95, 99):
+        assert fleet.quantile(q) == direct.quantile(q), q
+
+
+def test_ledger_json_schema_and_extras():
+    led = FleetLedger()
+    for i in range(5):
+        led.record(0, 0, i, wall_s=1.0 + i, wire_bytes=10,
+                   kind="replay", tokens=8)
+    led.record(0, 0, 99, participated=False)
+    doc = json.loads(json.dumps(led.to_json()))        # through real JSON
+    assert doc["schema"] == SCHEMA
+    assert len(doc["records"]) == 6
+    assert doc["records"][0]["extra"] == {"kind": "replay", "tokens": 8}
+    cl = doc["clusters"]["0"]
+    assert cl["clients"] == 6 and cl["fits"] == 5 and cl["skipped"] == 1
+    assert cl["wire_bytes"] == 50
+    assert {"count", "p50", "p99"} <= set(cl["wall_s"])
+    assert doc["fleet"]["wire_bytes"] == 50
+    # sketch embedded in the dump round-trips
+    from repro.obs.sketch import QuantileSketch
+    sk = QuantileSketch.from_dict(cl["wall_s_sketch"])
+    assert sk.count == 5 and sk.max == 5.0
+
+
+def test_ledger_to_trace_emits_cluster_tracks(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    obs.reset()
+    led = FleetLedger()
+    for i, w in enumerate([1.0, 1.0, 1.0, 1.0, 9.0]):
+        led.record(0, 0, i, wall_s=w, wire_bytes=4, t0=100.0 + i)
+    led.record(0, 1, 50, participated=False)
+    led.to_trace()
+    path = obs.dump(str(tmp_path / "t.json"))
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    names = {e["args"]["name"] for e in evs if e["name"] == "thread_name"}
+    assert {"fleet:cluster0", "fleet:cluster1"} <= names
+    fits = [e for e in evs if e["name"] == "client4.fit" and e["ph"] == "X"]
+    assert fits and fits[0]["args"]["straggler"] == "p99"
+    skips = [e for e in evs if e["name"] == "client50.skipped"]
+    assert skips and skips[0]["ph"] == "i"
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 64-client federated fit
+# ---------------------------------------------------------------------------
+
+def test_fed_64_clients_wire_invariant_and_straggler(tmp_path):
+    """ISSUE acceptance: ≥64 clients produce a fleet.json whose per-cluster
+    summed wire bytes equal the comm accounting exactly, with an injected
+    slow client flagged as a straggler."""
+    from repro.core import comm
+    from repro.train.fed_trainer import federated_fit
+
+    cfg = get_smoke_config("fedtime-llama2-7b")
+    # every cluster member fits each round so the slow client always runs
+    cfg = dataclasses.replace(
+        cfg, fedtime=dataclasses.replace(cfg.fedtime, clients_per_round=64))
+    ft = cfg.fedtime
+    L, T, M = ft.lookback, ft.horizon, 2
+    rng = np.random.default_rng(0)
+    # bimodal series: k-means yields two fat clusters, so the slow client's
+    # cluster always has enough fits for straggler statistics
+    data = []
+    for i in range(64):
+        shift = 0.0 if i < 32 else 5.0
+        data.append((rng.standard_normal((4, L, M)).astype(np.float32) + shift,
+                     rng.standard_normal((4, T, M)).astype(np.float32) + shift))
+
+    out = tmp_path / "fleet.json"
+    res = federated_fit(cfg, data, rounds=1, batch_size=4,
+                        key=jax.random.PRNGKey(0), wire="int8",
+                        slow_clients={0: 0.4}, fleet_out=str(out))
+    led = res.fleet
+    assert len([r for r in led.records if r.participated]) == 64
+    assert all(r.staleness == 0 for r in led.records)   # first sighting
+
+    # --- the "one number, five ways" invariant, exactly -------------------
+    by_cluster = led.wire_bytes_by_cluster(round=0)
+    for log in res.logs:
+        assert by_cluster[log.cluster] == log.comm.bytes_up, log.cluster
+    n_params = comm.count_params(res.adapters_per_cluster[0])
+    assert led.total_wire_bytes() == \
+        64 * comm.wire_payload_bytes(n_params, "int8")
+
+    # --- injected slow client flagged -------------------------------------
+    flagged = {r.client for r, _ in led.stragglers()}
+    assert 0 in flagged
+    # int8 wire: every participating fit carried an EF residual norm field
+    assert all(r.ef_norm >= 0.0 for r in led.records if r.participated)
+    assert all(r.delta_norm > 0.0 for r in led.records if r.participated)
+
+    # --- standalone fleet.json -------------------------------------------
+    doc = json.load(open(out))
+    assert doc["schema"] == SCHEMA
+    assert doc["fleet"]["wire_bytes"] == led.total_wire_bytes()
+    assert any(s["client"] == 0 for s in doc["fleet"]["stragglers"])
+    assert sum(c["fits"] for c in doc["clusters"].values()) == 64
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_ring_retains_tail_and_counts_drops():
+    fr = FlightRecorder(capacity=8)
+    for i in range(20):
+        fr.record("i", f"e{i}", "t", float(i))
+    assert len(fr) == 8 and fr.recorded == 20
+    doc = fr.to_chrome_trace("unit")
+    meta = doc["metadata"]["flight_recorder"]
+    assert meta == {"capacity": 8, "retained": 8, "recorded": 20,
+                    "dropped": 12}
+    assert doc["metadata"]["reason"] == "unit"
+    kept = [e["name"] for e in doc["traceEvents"]
+            if e["name"] != "thread_name"]
+    assert kept == [f"e{i}" for i in range(12, 20)]    # the most recent tail
+
+
+def _chrome_schema_ok(doc):
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    tids = set()
+    for e in doc["traceEvents"]:
+        assert e["ph"] in ("X", "i", "C", "M"), e
+        assert "name" in e and "pid" in e and "tid" in e
+        if e["ph"] == "M":
+            tids.add(e["tid"])
+        else:
+            assert e["ts"] >= 0.0
+            assert e["tid"] in tids            # every event on a named track
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    assert doc["metadata"]["tool"] == "repro.obs.flight"
+    fl = doc["metadata"]["flight_recorder"]
+    assert fl["retained"] <= fl["capacity"]
+    assert fl["dropped"] == fl["recorded"] - fl["retained"]
+    return True
+
+
+def test_flight_survives_mid_run_trace_toggle(monkeypatch, tmp_path):
+    """The recorder's whole point: REPRO_TRACE flips to 0 mid-run and the
+    events emitted while the tracer is OFF still land in a valid dump."""
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    monkeypatch.delenv("REPRO_FLIGHT", raising=False)
+    obs.reset()
+    flight_mod.get_flight().reset()
+    with obs.span("phase.traced", step=1):
+        pass
+    monkeypatch.setenv("REPRO_TRACE", "0")             # mid-run toggle
+    assert not obs.enabled()
+    with obs.span("phase.dark", step=2):
+        pass
+    obs.instant("dark.instant")
+    obs.counter_track("dark.counter", v=1.0)
+    out = tmp_path / "flight.json"
+    monkeypatch.setenv("REPRO_FLIGHT_OUT", str(out))
+    assert flight_mod.maybe_dump("toggle-test") == str(out)
+    doc = json.load(open(out))
+    assert _chrome_schema_ok(doc)
+    names = [e["name"] for e in doc["traceEvents"]]
+    # events from BOTH sides of the toggle are retained
+    for want in ("phase.traced", "phase.dark", "dark.instant",
+                 "dark.counter"):
+        assert want in names, want
+    assert doc["metadata"]["reason"] == "toggle-test"
+
+
+def test_flight_disabled_records_nothing(monkeypatch):
+    monkeypatch.setenv("REPRO_FLIGHT", "0")
+    monkeypatch.setenv("REPRO_TRACE", "0")
+    fr = flight_mod.get_flight()
+    fr.reset()
+    with obs.span("invisible"):
+        pass
+    obs.instant("invisible.i")
+    assert len(fr) == 0
+    # and maybe_dump with an empty ring writes nothing
+    monkeypatch.setenv("REPRO_FLIGHT_OUT", "/nonexistent/nope.json")
+    assert flight_mod.maybe_dump("empty") is None
+
+
+def test_forced_eviction_dumps_valid_flight_trace(monkeypatch, tmp_path):
+    """ISSUE acceptance: a flight dump produced by forced pool eviction
+    validates against the Chrome trace schema."""
+    from repro.models.registry import get_model
+    from repro.serve import ForecastEngine, Request
+
+    monkeypatch.setenv("REPRO_TRACE", "0")             # dark deployment
+    monkeypatch.delenv("REPRO_FLIGHT", raising=False)
+    out = tmp_path / "evict_flight.json"
+    monkeypatch.setenv("REPRO_FLIGHT_OUT", str(out))
+    flight_mod.get_flight().reset()
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(27)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(2)]
+    gen = 16
+    eng = ForecastEngine(cfg, params, num_slots=2, cache_len=48,
+                         paged=True, block_size=8, pool_blocks=4,
+                         max_tokens_in_flight=2 * (6 + gen),
+                         swap_tier=False)
+    eng.submit(Request(id="r0", prompt=prompts[0], max_new_tokens=gen))
+    eng.submit(Request(id="r1", prompt=prompts[1], max_new_tokens=gen))
+    eng.run(max_steps=500)
+    assert eng.metrics.evictions >= 1
+    assert out.exists()                                # dump fired mid-run
+    doc = json.load(open(out))
+    assert _chrome_schema_ok(doc)
+    assert doc["metadata"]["reason"].startswith("engine.")
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "req.evict" in names                        # the distress itself
+
+
+# ---------------------------------------------------------------------------
+# device memory + HLO scope attribution
+# ---------------------------------------------------------------------------
+
+def test_memory_snapshot_counts_live_buffers():
+    x = jnp.ones((256, 4), jnp.float32)                # keep alive
+    snap = devmem.memory_snapshot()
+    assert set(snap) == {"bytes_in_use", "peak_bytes_in_use", "bytes_limit",
+                         "live_buffer_bytes", "live_buffers"}
+    assert snap["live_buffer_bytes"] >= x.nbytes
+    assert snap["live_buffers"] >= 1
+    assert devmem.peak_bytes() >= x.nbytes
+
+
+def test_watermark_emits_gauges_and_counter_track(monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    obs.reset()
+    keep = jnp.zeros((64, 64), jnp.float32)
+    snap = devmem.watermark("unit")
+    assert snap["live_buffer_bytes"] >= keep.nbytes
+    tr = obs.get_tracer()
+    # on CPU bytes_in_use falls back to the live-buffer footprint
+    assert tr.gauges["devmem.unit.bytes_in_use"] >= float(keep.nbytes)
+    # the counter-track sample landed on the flight recorder too
+    assert any(name == "devmem" and ph == "C"
+               for ph, name, *_ in flight_mod.get_flight()._buf)
+
+
+def test_scope_costs_attributes_named_scopes():
+    def f(x, w):
+        with jax.named_scope("obs.proj"):
+            y = x @ w
+        return y + 1.0                                 # unscoped epilogue
+
+    x = jnp.ones((16, 32), jnp.float32)
+    w = jnp.ones((32, 8), jnp.float32)
+    compiled = jax.jit(f).lower(x, w).compile()
+    costs = devmem.compiled_scope_costs(compiled)
+    assert costs is not None and "obs.proj" in costs
+    # the dot's FLOPs land in the named scope: 2*M*K*N
+    assert costs["obs.proj"]["flops"] >= 2 * 16 * 32 * 8
+    assert costs["obs.proj"]["bytes"] > 0
+    other = sum(v["flops"] for k, v in costs.items() if k != "obs.proj")
+    assert other < costs["obs.proj"]["flops"]          # dot dominates
+
+
+def test_scope_costs_on_dispatch_kernel():
+    """The kernels' own ``obs.*`` scopes (PR 6) are what production
+    attribution keys on — rmsnorm's dispatch wrapper must show up."""
+    from repro.kernels import ops
+    x = jnp.ones((4, 64), jnp.float32)
+    g = jnp.ones((64,), jnp.float32)
+    compiled = jax.jit(lambda a, b: ops.rmsnorm(a, b)).lower(x, g).compile()
+    costs = devmem.compiled_scope_costs(compiled)
+    assert costs and "obs.rmsnorm" in costs
+    assert costs["obs.rmsnorm"]["ops"] >= 1

@@ -114,6 +114,7 @@ def test_virtual_tracks_and_span_count():
 
 def test_disabled_tracer_is_noop_and_cheap(monkeypatch):
     monkeypatch.setenv("REPRO_TRACE", "0")
+    monkeypatch.setenv("REPRO_FLIGHT", "0")   # pure no-op: flight off too
     tr = Tracer()
     assert tr.span("x") is _NULL_SPAN         # shared singleton, no alloc
     n = 20_000

@@ -90,6 +90,49 @@ def test_allocator_fragmentation_after_staggered_retirement():
     assert a.free_blocks == 0
 
 
+def test_free_runs_and_fragmentation_gauge():
+    a = BlockAllocator(8)
+    assert a.free_runs == 1 and a.fragmentation == 0.0   # [0..7] contiguous
+    held = a.alloc(8)
+    assert a.free_runs == 0 and a.fragmentation == 0.0   # nothing free
+    a.free([held[1]])
+    assert a.free_runs == 1 and a.fragmentation == 0.0   # single block
+    a.free([held[3], held[5]])                           # holes: {1,3,5}
+    assert a.free_runs == 3
+    assert a.fragmentation == pytest.approx(2 / 2)       # fully shredded
+    a.free([held[2]])                                    # {1,2,3,5}: 2 runs
+    assert a.free_runs == 2
+    assert a.fragmentation == pytest.approx(1 / 3)
+    a.free([held[0], held[4], held[6], held[7]])         # all free again
+    assert a.free_runs == 1 and a.fragmentation == 0.0
+
+
+def test_fragmentation_bounded_under_churn():
+    rng = np.random.default_rng(11)
+    a = BlockAllocator(24)
+    held = []
+    for _ in range(200):
+        if rng.integers(2) and a.free_blocks:
+            held += a.alloc(int(rng.integers(1, a.free_blocks + 1)))
+        elif held:
+            k = int(rng.integers(1, len(held) + 1))
+            take = [held.pop(int(rng.integers(len(held))))
+                    for _ in range(k)]
+            a.free(take)
+        assert 0.0 <= a.fragmentation <= 1.0
+        assert a.free_runs <= max(a.free_blocks, 1)
+
+
+def test_engine_metrics_fragmentation_summary():
+    from repro.serve.metrics import EngineMetrics
+    m = EngineMetrics(num_slots=2)
+    for frag in (0.0, 0.5, 0.25, 1.0):
+        m.record_decode_step(1, 1, 0.01, fragmentation=frag)
+    s = m.summary()
+    assert s["mean_fragmentation"] == pytest.approx(0.4375)
+    assert s["peak_fragmentation"] == 1.0
+
+
 def _partition_holds(a: BlockAllocator):
     free = set(a._free)
     assert len(free) == len(a._free), "duplicate in free list"

@@ -1,23 +1,56 @@
-"""Secure aggregation (SecAgg-lite): pairwise additive masking.
+"""Secure aggregation (SecAgg-lite): pairwise additive masking, with
+dropout recovery over an integer (int8-range, EF-quantized) wire.
 
 The paper's privacy claim rests on data never leaving the device; adapter
-*updates* still leak gradients. Classic mitigation (Bonawitz et al. 2017):
-every client pair (i, j) derives a shared mask m_ij from a common seed;
-client i adds +m_ij, client j adds −m_ij — masks cancel exactly in the
-cluster sum, so the server only ever sees the aggregate.
+*updates* still leak gradients.  Classic mitigation (Bonawitz et al.
+2017): every client pair (i, j) derives a shared mask m_ij from a common
+seed; client i adds +m_ij, client j adds −m_ij — masks cancel exactly in
+the cluster sum, so the server only ever sees the aggregate.
 
-This is the single-round, no-dropout-recovery variant (dropout recovery
-needs the full secret-sharing protocol; out of scope — the fed_trainer
-handles stragglers by exclusion *before* masking instead).
+Two wire domains:
+
+  * **float domain** (``mask_update`` / ``aggregate_masked`` /
+    ``float_recovery_mask``) — Gaussian masks added to f32 trees.  The
+    original single-round variant; cancellation is exact only up to f32
+    rounding, and dropout recovery (re-adding the uncancelled masks of
+    dropped partners) is likewise approximate.
+  * **integer domain** (``secure_encode`` / ``mask_codes`` /
+    ``unmask_sum`` / ``recovery_mask``) — the fault-tolerant path.  Each
+    client quantizes its delta onto a *shared* step grid (int8-range
+    codes, error-feedback residual carried per client, same EF semantics
+    as the ``repro.dist.fedcomm`` wire), then masks the codes with
+    pairwise uint32 streams; all arithmetic is mod 2³², where pairwise
+    cancellation and dropout recovery are EXACT — bit for bit, for every
+    surviving subset.  The shared grid also clips every upload to
+    ±127·step, which bounds a byzantine client's influence for free (and
+    makes NaN/Inf structurally impossible on this wire).
+
+Dropout recovery: when clients commit masks against a participant set P
+but only S ⊆ P actually upload, the survivor sum carries the uncancelled
+masks ±m_ij for i ∈ S, j ∈ P∖S.  ``recovery_mask(S, P∖S, ...)``
+regenerates exactly that residue (in the real protocol the survivors
+reveal their pairwise seeds with the dropped via secret sharing; this
+simulation regenerates them directly) and ``unmask_sum`` subtracts it —
+the result equals the unmasked survivor code sum exactly.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence
+import os
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+__all__ = ["mask_update", "aggregate_masked", "float_recovery_mask",
+           "default_step", "secure_encode", "secure_decode_sum",
+           "mask_codes", "recovery_mask", "unmask_sum", "pair_mask_u32"]
+
+
+# ---------------------------------------------------------------------------
+# Float domain (legacy single-round variant)
+# ---------------------------------------------------------------------------
 
 def _pair_seed(round_idx: int, i: int, j: int) -> jax.Array:
     a, b = (i, j) if i < j else (j, i)
@@ -59,3 +92,114 @@ def aggregate_masked(masked_updates: List, weights=None):
     if weights is None:
         return jax.tree.map(lambda a: a / n, total)
     return total
+
+
+def float_recovery_mask(survivors: Sequence[int], dropped: Sequence[int],
+                        *, round_idx: int, like, scale: float = 1e-2):
+    """Σ over (i ∈ survivors, j ∈ dropped) of the uncancelled mask
+    survivor i added for dropped partner j — subtract this from the
+    survivor sum to recover the unmasked aggregate (up to f32 rounding;
+    the integer-domain path below is the exact one)."""
+    total = jax.tree.map(lambda l: jnp.zeros(l.shape, jnp.float32), like)
+    for i in survivors:
+        for j in dropped:
+            sign = 1.0 if i < j else -1.0
+            total = _mask_tree(total, _pair_seed(round_idx, i, j),
+                               sign, scale)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Integer domain (fault-tolerant path): shared-grid EF quantization
+# ---------------------------------------------------------------------------
+
+def default_step() -> float:
+    """Shared quantization step of the secure integer wire
+    (``REPRO_SECAGG_STEP``).  2⁻¹⁰ covers adapter deltas to ±0.124 at
+    int8 range; clipping error lands in the per-client EF residual."""
+    return float(os.environ.get("REPRO_SECAGG_STEP", str(2.0 ** -10)))
+
+
+def secure_encode(flat: np.ndarray, residual: Optional[np.ndarray] = None,
+                  *, step: Optional[float] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Quantize a flat f32 payload onto the shared grid with error
+    feedback: ``t = flat + residual``; codes = clip(round(t/step), ±127);
+    new residual = t − codes·step (carried to this client's next round —
+    clipping and rounding error are both fed back, so repeated rounds
+    stay unbiased).  Returns ``(codes int32, new_residual f32)``."""
+    step = step or default_step()
+    flat = np.asarray(flat, np.float32)
+    t = flat + (np.zeros_like(flat) if residual is None
+                else np.asarray(residual, np.float32))
+    codes = np.clip(np.rint(t / step), -127, 127).astype(np.int32)
+    new_res = t - codes.astype(np.float32) * np.float32(step)
+    return codes, new_res
+
+
+def secure_decode_sum(code_sum: np.ndarray, *,
+                      step: Optional[float] = None) -> np.ndarray:
+    """Dequantize an exact integer code sum: one f32 multiply per
+    element, so equal code sums give bit-identical floats."""
+    step = step or default_step()
+    return code_sum.astype(np.float32) * np.float32(step)
+
+
+def pair_mask_u32(round_idx: int, i: int, j: int, n: int) -> np.ndarray:
+    """The (order-independent) pairwise mask stream for clients (i, j) in
+    round ``round_idx``: ``n`` uint32 values, deterministic from the pair
+    seed.  Both endpoints generate the identical stream."""
+    a, b = (i, j) if i < j else (j, i)
+    rng = np.random.default_rng(
+        np.random.SeedSequence(entropy=round_idx, spawn_key=(a, b)))
+    return rng.integers(0, 2 ** 32, size=n, dtype=np.uint32)
+
+
+def mask_codes(codes: np.ndarray, *, client_id: int,
+               participants: Sequence[int],
+               round_idx: int) -> np.ndarray:
+    """Client-side: codes + Σ ±m_ij mod 2³².  Sign convention: the
+    lower-id endpoint adds, the higher-id subtracts — so each pair's
+    masks cancel exactly in modular arithmetic."""
+    out = codes.astype(np.int64).astype(np.uint32)   # two's complement
+    for other in participants:
+        if other == client_id:
+            continue
+        m = pair_mask_u32(round_idx, client_id, other, codes.size)
+        out = (out + m) if client_id < other else (out - m)
+    return out
+
+
+def recovery_mask(survivors: Sequence[int], dropped: Sequence[int], *,
+                  round_idx: int, n: int) -> np.ndarray:
+    """The mod-2³² residue the dropped clients leave in the survivor sum:
+    Σ over (i ∈ survivors, j ∈ dropped) of ±m_ij with i's sign.  Subtract
+    from the masked survivor sum to unmask it exactly."""
+    total = np.zeros(n, np.uint32)
+    for i in survivors:
+        for j in dropped:
+            m = pair_mask_u32(round_idx, i, j, n)
+            total = (total + m) if i < j else (total - m)
+    return total
+
+
+def unmask_sum(masked: Sequence[np.ndarray], survivors: Sequence[int],
+               *, participants: Sequence[int],
+               round_idx: int) -> np.ndarray:
+    """Server-side: sum the survivors' masked codes, subtract the
+    recovery residue for every dropped participant, and center back to
+    signed integers.  EXACT for every surviving subset: the result
+    equals Σ (unmasked codes) over survivors, provided that true sum
+    fits in int32 (|codes| ≤ 127 ⇒ up to ~16.9M clients)."""
+    if not masked:
+        raise ValueError("unmask_sum needs at least one survivor upload")
+    if len(masked) != len(survivors):
+        raise ValueError(f"{len(masked)} uploads for {len(survivors)} "
+                         "survivors")
+    dropped = [p for p in participants if p not in set(survivors)]
+    total = np.zeros(masked[0].size, np.uint32)
+    for u in masked:
+        total = total + np.asarray(u, np.uint32)
+    total = total - recovery_mask(survivors, dropped,
+                                  round_idx=round_idx, n=total.size)
+    return total.astype(np.int32)                    # exact recentring

@@ -3,9 +3,29 @@
 Per cluster: weighted FedAvg of client adapter trees, then FedAdam on the
 cluster's global adapters (the paper uses FedAdam to update the QLoRA
 parameters, §4.1 Implementation Details).
+
+Fault tolerance additions:
+
+  * :meth:`ClusterServer.apply_deltas` — the delta-domain entry point the
+    resilient round loop uses.  Under partial participation the cohort is
+    whatever survived the deadline plus whatever drained from the
+    staleness buffer; weights are renormalized to sum to 1 over exactly
+    that cohort before the FedAdam step, so a half-empty round moves the
+    server by a correctly-weighted average, not a half-scaled one.
+  * :class:`StalenessBuffer` — server-side accumulation of late client
+    deltas ("async" aggregation on the virtual clock).  Deltas arriving
+    after a round's deadline buffer until the cluster's next aggregation;
+    a drained delta ``s`` rounds old is down-weighted by ``decay**s`` and
+    rejected outright beyond ``limit`` rounds — bounded staleness, so the
+    round clock is set by the deadline rather than by the slowest of
+    millions of clients.
 """
 
 from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +45,89 @@ class ClusterServer:
     def aggregate(self, client_adapters, weights):
         """client_adapters: list of adapter trees; weights: per-device w_s
         (paper: w_{s,c}, e.g. local dataset sizes)."""
-        avg = fedavg(client_adapters, jnp.asarray(weights, jnp.float32))
-        delta = jax.tree.map(
+        deltas = [jax.tree.map(
             lambda a, g: a.astype(jnp.float32) - g.astype(jnp.float32),
-            avg, self.adapters)
+            ad, self.adapters) for ad in client_adapters]
+        return self.apply_deltas(deltas, weights)
+
+    def apply_deltas(self, deltas, weights):
+        """FedAdam step from client adapter DELTAS (vs each client's
+        pull-time global — under async staleness these differ from the
+        current global, which is exactly why the delta is the unit that
+        buffers).  ``weights`` are renormalized to sum to 1 over this
+        cohort; a partial cohort therefore yields an unbiased weighted
+        average, not a scaled-down one."""
+        if not deltas:
+            raise ValueError("apply_deltas needs a non-empty cohort")
+        w = jnp.asarray(weights, jnp.float32)
+        if w.shape != (len(deltas),):
+            raise ValueError(
+                f"weights shape {w.shape} != cohort size {len(deltas)}")
+        if float(w.sum()) <= 0.0:
+            raise ValueError("cohort weights must sum to a positive value")
+        avg_delta = fedavg(deltas, w)        # normalizes: Σ w_k = 1
         self.adapters, self.opt = fedadam_update(
-            self.adapters, delta, self.opt, lr=self.lr)
+            self.adapters, avg_delta, self.opt, lr=self.lr)
         self.round += 1
         return self.adapters
+
+
+# ---------------------------------------------------------------------------
+# Staleness-bounded async buffering
+# ---------------------------------------------------------------------------
+
+@dataclass
+class BufferedDelta:
+    """One late client delta parked server-side until its cluster's next
+    aggregation window."""
+
+    client: int
+    cluster: int
+    origin_round: int          # the round whose global the delta is against
+    ready_at: float            # virtual arrival time
+    weight: float              # raw client weight (pre-decay)
+    loss: float
+    delta: Any                 # adapter-delta pytree (post-wire view)
+
+
+class StalenessBuffer:
+    """Bounded-staleness accumulation of late deltas; see module
+    docstring.  ``drain`` returns ``(apply, reject)``: entries whose
+    arrival fell inside the closing window, split by the staleness bound,
+    with each applied entry's weight pre-multiplied by ``decay**s``."""
+
+    def __init__(self, limit: int = 2, decay: float = 0.5):
+        if limit < 0 or not (0.0 < decay <= 1.0):
+            raise ValueError(f"bad staleness bound limit={limit} "
+                             f"decay={decay}")
+        self.limit = limit
+        self.decay = decay
+        self.entries: List[BufferedDelta] = []
+
+    def add(self, entry: BufferedDelta) -> None:
+        if not math.isfinite(entry.ready_at):
+            raise ValueError("non-arriving (hung) uploads never buffer")
+        self.entries.append(entry)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def drain(self, cluster: int, round_idx: int, window_end: float
+              ) -> Tuple[List[Tuple[BufferedDelta, float]],
+                         List[Tuple[BufferedDelta, int]]]:
+        """Pull this cluster's entries that arrived by ``window_end``.
+        Returns ``(apply, reject)`` where ``apply`` pairs each entry with
+        its decayed weight and ``reject`` pairs each with its (too-large)
+        staleness."""
+        ready = [e for e in self.entries
+                 if e.cluster == cluster and e.ready_at <= window_end]
+        taken = {id(e) for e in ready}
+        self.entries = [e for e in self.entries if id(e) not in taken]
+        apply, reject = [], []
+        for e in ready:
+            staleness = max(round_idx - e.origin_round, 1)
+            if staleness > self.limit:
+                reject.append((e, staleness))
+            else:
+                apply.append((e, e.weight * self.decay ** staleness))
+        return apply, reject

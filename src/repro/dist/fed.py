@@ -101,8 +101,29 @@ def fed_psum(tree, mesh):
     return jax.tree.map(lambda x: jax.lax.psum(x, axes), tree)
 
 
+def mask_members(member_adapters, weights, alive):
+    """Partial participation on the mesh path (``repro.fault``): zero out
+    dropped members' rows AND weights, renormalizing the surviving
+    weights to sum to 1.  Zeroing the rows matters, not just the weights:
+    a crashed member's buffer can legitimately hold NaN/Inf, and
+    ``0 · NaN = NaN`` — a zero weight alone cannot keep the poison out of
+    the reduction.  Returns ``(masked_adapters, renormalized_weights)``
+    shaped exactly like the inputs, so the ring fast path's compiled
+    cache key is unchanged."""
+    alive = jnp.asarray(alive)
+    w = jnp.asarray(weights, jnp.float32) * alive.astype(jnp.float32)
+    total = w.sum()
+    w = jnp.where(total > 0, w / jnp.where(total > 0, total, 1.0), w)
+
+    def zero_dead(a):
+        m = alive.reshape((alive.shape[0],) + (1,) * (a.ndim - 1))
+        return jnp.where(m.astype(bool), a, jnp.zeros_like(a))
+
+    return jax.tree.map(zero_dead, member_adapters), w
+
+
 def aggregate_adapters(member_adapters, weights, mesh=None, *,
-                       wire: str = None, state: dict = None,
+                       alive=None, wire: str = None, state: dict = None,
                        byte_ledger: list = None):
     """Algorithm 1, lines 12-14: weighted aggregation of member adapter
     trees, Σ_k w_k · Δ_k with Σ w_k = 1 (w_k = n_k / n cluster sizes).
@@ -115,8 +136,16 @@ def aggregate_adapters(member_adapters, weights, mesh=None, *,
     ``repro.dist.fedcomm.ring_aggregate``, which also accepts the
     error-feedback ``state`` and the measuring ``byte_ledger``; passing
     ``state`` makes this return ``(tree, new_state)``.  ``REPRO_FED_RING=0``
-    restores the generic psum lowering below."""
+    restores the generic psum lowering below.
+
+    ``alive`` (optional bool/0-1 vector over the member dim) handles
+    partial participation: dropped members are excluded via
+    :func:`mask_members` — rows zeroed, weights renormalized over the
+    survivors — before the reduction, on either lowering."""
     from repro.dist import fedcomm
+    if alive is not None:
+        member_adapters, weights = mask_members(member_adapters, weights,
+                                                alive)
     axes = aggregation_axes(mesh) if mesh is not None else ()
     if axes and isinstance(mesh, Mesh) and fedcomm.ring_enabled():
         return fedcomm.ring_aggregate(member_adapters, weights, mesh,

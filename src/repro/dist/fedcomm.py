@@ -103,6 +103,13 @@ def ring_aggregate(member_adapters, weights, mesh, *, wire: str = None,
 
     Returns the aggregated tree, or ``(tree, new_state)`` when ``state``
     is given.
+
+    Partial participation: this kernel reduces whatever rows it is
+    handed; drop members BEFORE the call via
+    ``repro.dist.fed.mask_members`` (rows zeroed + weights renormalized,
+    shapes unchanged) so the compiled executable and its byte ledger are
+    reused across cohort changes — see ``fed.aggregate_adapters(alive=)``
+    and the ``repro.fault`` round loop.
     """
     from repro.dist.fed import aggregation_axes
     wire = wire or wire_format()

@@ -1,0 +1,43 @@
+"""``repro.fault`` — deterministic fault injection + round recovery.
+
+FedTime's premise is millions of edge clients; at that scale crashed,
+hung, corrupt, and malicious clients are the steady state, not the
+exception.  This package gives the federated trainer the machinery to
+*survive* them, deterministically enough to test in CI:
+
+  * :mod:`repro.fault.clock` — a virtual clock.  Fit durations, retry
+    backoffs, and round deadlines are virtual seconds, so a chaos run
+    covering hours of simulated wall time executes in milliseconds (the
+    old ``time.sleep``-based ``slow_clients`` hack is a thin shim over
+    this now).
+  * :mod:`repro.fault.plan` — :class:`FaultPlan` / :class:`Fault`: a
+    declarative per-client fault schedule (crash-before-upload, hang,
+    transient-fail-then-recover with exponential backoff, corrupt/NaN
+    delta, byzantine-scaled delta, plain delay), deterministic from a
+    seed, replayable round by round.
+  * :mod:`repro.fault.guard` — server-side delta validation: non-finite
+    uploads and norm-outlier (byzantine) uploads are rejected before they
+    can poison aggregation.
+  * :mod:`repro.fault.snapshot` — atomic round-state snapshots
+    (aggregated adapters + FedAdam moments, EF residuals, staleness
+    buffer, participation clock, RNG counters, virtual clock) through the
+    crash-safe :mod:`repro.train.checkpoint` writer, so a kill-9'd server
+    resumes the same round bit-identically.
+
+``train/fed_trainer.federated_fit(fault_plan=..., deadline_s=...,
+snapshot_path=...)`` threads all four together; every injected fault,
+rejection, retry, and recovery emits through ``repro.obs`` (fleet-ledger
+reasons + flight-recorder distress instants).
+"""
+
+from repro.fault.clock import VirtualClock
+from repro.fault.guard import delta_norm, validate_deltas
+from repro.fault.plan import FAULT_KINDS, Attempt, Fault, FaultPlan
+from repro.fault.snapshot import (SNAPSHOT_SCHEMA, load_round_state,
+                                  save_round_state)
+
+__all__ = [
+    "Attempt", "FAULT_KINDS", "Fault", "FaultPlan", "SNAPSHOT_SCHEMA",
+    "VirtualClock", "delta_norm", "load_round_state", "save_round_state",
+    "validate_deltas",
+]

@@ -1,0 +1,65 @@
+"""Server-side delta validation: the last line of defence before
+aggregation.
+
+Two screens, applied to every upload (on-time and drained-from-buffer)
+in a round's cohort:
+
+  * **finite** — any NaN/Inf anywhere in the delta rejects it
+    (``reason="corrupt"``).  One corrupt client would otherwise poison
+    the FedAdam moments for every client in the cluster, permanently.
+  * **norm** — a delta whose L2 norm exceeds ``byz_k`` × the cohort
+    median norm rejects (``reason="byzantine"``).  The median is taken
+    over the finite norms of the *same cohort*, so the attacker cannot
+    inflate its own acceptance threshold unless it controls half the
+    round (the standard robust-statistics argument; matches the
+    MAD-style straggler flagging in ``repro.obs.fleet``).
+
+Validation is cohort-at-once (not per-upload) because the norm screen
+needs the cohort median first.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["delta_norm", "validate_deltas"]
+
+
+def delta_norm(tree) -> float:
+    """Global L2 norm of a delta pytree (NaN if any leaf is non-finite —
+    NaN propagates through the sum, which is exactly what we want the
+    finite screen to see)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return 0.0
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                              for l in leaves)))
+
+
+def validate_deltas(deltas: Sequence, *, byz_k: float = 25.0,
+                    norms: Optional[Sequence[float]] = None
+                    ) -> List[Tuple[bool, Optional[str], float]]:
+    """Validate a round cohort of delta trees.
+
+    Returns one ``(ok, reason, norm)`` per delta, ``reason`` in
+    ``{"corrupt", "byzantine", None}``.  Pass precomputed ``norms`` to
+    skip the reduction (the trainer already has them for telemetry)."""
+    if norms is None:
+        norms = [delta_norm(d) for d in deltas]
+    norms = [float(n) for n in norms]
+    finite = [n for n in norms if math.isfinite(n)]
+    med = float(np.median(finite)) if finite else 0.0
+    out: List[Tuple[bool, Optional[str], float]] = []
+    for n in norms:
+        if not math.isfinite(n):
+            out.append((False, "corrupt", n))
+        elif med > 0.0 and n > byz_k * med:
+            out.append((False, "byzantine", n))
+        else:
+            out.append((True, None, n))
+    return out

@@ -1,0 +1,189 @@
+"""Declarative, deterministic fault schedules for federated clients.
+
+A :class:`FaultPlan` maps client ids to lists of :class:`Fault` specs and
+answers two questions the round loop asks:
+
+  * :meth:`FaultPlan.attempt` — given a client's base (virtual) fit
+    duration, how long until its upload arrives, and does it arrive at
+    all?  This is where crash/hang/transient/delay faults act, entirely
+    on the virtual clock.
+  * :meth:`FaultPlan.mutate_delta` — what does the server actually
+    *receive*?  This is where corrupt (NaN/Inf) and byzantine
+    (norm-scaled) faults act, applied to the post-wire (dequantized)
+    delta — modelling damage on the upload path, after the client's
+    honest EF quantization.
+
+Plans are plain data: deterministic from their construction (or from the
+seed of :meth:`FaultPlan.random`), so a chaos run replays bit-identically
+— which is what lets the crash-recovery test compare a kill-9'd round
+against an uninterrupted one.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FAULT_KINDS", "Fault", "FaultPlan", "Attempt"]
+
+#: crash   — client computes but dies before upload (nothing arrives)
+#: hang    — client never returns (arrival at +inf; the deadline excludes it)
+#: transient — ``fails`` failed attempts with exponential backoff, then success
+#: corrupt — upload arrives with non-finite values (NaN/Inf)
+#: byzantine — upload arrives scaled by ``scale`` (norm attack)
+#: delay   — upload arrives ``delay_s`` virtual seconds late
+FAULT_KINDS = ("crash", "hang", "transient", "corrupt", "byzantine", "delay")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One fault spec.  ``rounds=None`` fires every round, otherwise only
+    on the given rounds."""
+
+    kind: str
+    rounds: Optional[FrozenSet[int]] = None
+    delay_s: float = 0.0           # delay: extra virtual seconds
+    fails: int = 2                 # transient: failed attempts before success
+    backoff_s: float = 0.25        # transient: base backoff, doubles per retry
+    scale: float = 100.0           # byzantine: delta multiplier
+    mode: str = "nan"              # corrupt: "nan" | "inf"
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"fault kind {self.kind!r}: choose from {FAULT_KINDS}")
+
+    def active(self, round_idx: int) -> bool:
+        return self.rounds is None or round_idx in self.rounds
+
+
+@dataclass(frozen=True)
+class Attempt:
+    """Outcome of one client's round attempt on the virtual clock."""
+
+    client: int
+    round: int
+    outcome: str                   # "ok" | "crash" | "hang"
+    virtual_s: float               # total virtual duration incl. retries
+    retries: int = 0
+    kinds: Tuple[str, ...] = ()
+
+    @property
+    def uploads(self) -> bool:
+        """Does a payload ever reach the server?"""
+        return self.outcome == "ok"
+
+
+@dataclass
+class FaultPlan:
+    """Per-client fault schedule; see module docstring.
+
+    ``base_fit_s``: if set, every fit costs exactly this many virtual
+    seconds (fully deterministic timelines — what the chaos/CI tests
+    use).  If ``None``, the measured wall time of the real fit is used as
+    the base (what the ``slow_clients`` shim preserves, so straggler
+    detection still sees real compute skew plus the injected delay).
+    """
+
+    faults: Dict[int, List[Fault]] = field(default_factory=dict)
+    base_fit_s: Optional[float] = None
+    seed: int = 0
+
+    # -- queries -------------------------------------------------------------
+
+    def faults_for(self, client: int, round_idx: int) -> List[Fault]:
+        return [f for f in self.faults.get(int(client), ())
+                if f.active(round_idx)]
+
+    def kinds_for(self, client: int, round_idx: int) -> Tuple[str, ...]:
+        return tuple(f.kind for f in self.faults_for(client, round_idx))
+
+    def will_upload(self, client: int, round_idx: int) -> bool:
+        """False when a crash/hang fault means the fit result is never
+        delivered — the round loop skips the (expensive) real fit then."""
+        return not ({"crash", "hang"} &
+                    set(self.kinds_for(client, round_idx)))
+
+    def fault_rate(self, n_clients: int) -> float:
+        return len(self.faults) / max(n_clients, 1)
+
+    # -- timing --------------------------------------------------------------
+
+    def attempt(self, client: int, round_idx: int,
+                base_s: float) -> Attempt:
+        """Resolve this client's round on the virtual clock.  ``base_s``
+        is the duration of one clean fit (``base_fit_s`` overrides the
+        caller's measurement when set)."""
+        base = self.base_fit_s if self.base_fit_s is not None else base_s
+        virtual = base
+        retries = 0
+        outcome = "ok"
+        kinds = self.kinds_for(client, round_idx)
+        for f in self.faults_for(client, round_idx):
+            if f.kind == "delay":
+                virtual += f.delay_s
+            elif f.kind == "transient":
+                # each failed attempt costs a full fit plus its backoff
+                for i in range(f.fails):
+                    virtual += base + f.backoff_s * (2 ** i)
+                retries += f.fails
+            elif f.kind == "crash":
+                outcome = "crash"            # dies at upload time
+            elif f.kind == "hang":
+                outcome = "hang"
+                virtual = math.inf
+        return Attempt(int(client), round_idx, outcome, virtual,
+                       retries, kinds)
+
+    # -- payload -------------------------------------------------------------
+
+    def mutate_delta(self, client: int, round_idx: int, delta):
+        """Apply corrupt/byzantine faults to the delta the server
+        receives (post-wire: the damage is on the upload path, not in the
+        client's honest EF quantization)."""
+        for f in self.faults_for(client, round_idx):
+            if f.kind == "corrupt":
+                bad = jnp.nan if f.mode == "nan" else jnp.inf
+                delta = jax.tree.map(
+                    lambda l: (l.reshape(-1).at[0].set(bad).reshape(l.shape)
+                               if l.size else l), delta)
+            elif f.kind == "byzantine":
+                delta = jax.tree.map(lambda l: l * f.scale, delta)
+        return delta
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_slow_clients(cls, slow: Dict[int, float]) -> "FaultPlan":
+        """The legacy ``slow_clients={id: seconds}`` kwarg as a plan:
+        pure virtual delay, measured base — straggler-detection tests see
+        the same wall_s they used to, without any ``time.sleep``."""
+        return cls({int(c): [Fault("delay", delay_s=float(s))]
+                    for c, s in slow.items()})
+
+    @classmethod
+    def random(cls, n_clients: int, rate: float, rounds: int, *,
+               seed: int = 0, kinds: Tuple[str, ...] = FAULT_KINDS[:5],
+               per_round_p: float = 0.6,
+               base_fit_s: float = 1.0) -> "FaultPlan":
+        """Deterministic chaos: ~``rate`` of the clients get one fault of
+        a random kind, firing independently per round with probability
+        ``per_round_p`` (at least one round always fires).  Same seed →
+        same plan, bit for bit."""
+        rng = np.random.default_rng(seed)
+        faults: Dict[int, List[Fault]] = {}
+        for cid in range(n_clients):
+            if rng.random() >= rate:
+                continue
+            kind = kinds[int(rng.integers(len(kinds)))]
+            active = frozenset(int(r) for r in range(rounds)
+                               if rng.random() < per_round_p)
+            if not active:
+                active = frozenset({int(rng.integers(max(rounds, 1)))})
+            faults[cid] = [Fault(kind, rounds=active)]
+        return cls(faults, base_fit_s=base_fit_s, seed=seed)

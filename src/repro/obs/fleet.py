@@ -192,6 +192,20 @@ class FleetLedger:
 
     # -- export --------------------------------------------------------------
 
+    def rejections_by_reason(self, cluster: Optional[int] = None
+                             ) -> Dict[str, int]:
+        """Histogram of exclusion reasons (``reason=`` extra on
+        non-participating records: crash/hang/deadline/corrupt/byzantine/
+        stale/...) — the audit trail of the fault-tolerant round loop."""
+        out: Dict[str, int] = {}
+        for r in self.records:
+            if r.participated or (cluster is not None
+                                  and r.cluster != cluster):
+                continue
+            why = (r.extra or {}).get("reason", "unknown")
+            out[why] = out.get(why, 0) + 1
+        return out
+
     def to_json(self) -> dict:
         per_cluster = {}
         for c in self.clusters:
@@ -202,6 +216,7 @@ class FleetLedger:
                             if r.cluster == c and r.participated),
                 "skipped": sum(1 for r in self.records
                                if r.cluster == c and not r.participated),
+                "rejections": self.rejections_by_reason(c),
                 "wire_bytes": self.wire_bytes_by_cluster().get(c, 0),
                 "wall_s": self.cluster_sketch(c, "wall_s").summary(),
                 "staleness": self.cluster_sketch(c, "staleness").summary(),
@@ -240,7 +255,8 @@ class FleetLedger:
             if not r.participated:
                 obs.instant(f"client{r.client}.skipped", cat="fleet",
                             track=track, round=r.round,
-                            staleness=r.staleness)
+                            staleness=r.staleness,
+                            reason=(r.extra or {}).get("reason"))
                 continue
             if r.t0 is None:
                 continue

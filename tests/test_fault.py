@@ -1,0 +1,550 @@
+"""Fault-tolerant federated rounds (repro.fault + resilient round loop).
+
+Covers the chaos harness end to end: virtual-clock fault plans (no
+``time.sleep`` anywhere), deadline-bounded partial participation with
+correct weight renormalization, staleness-bounded async buffering,
+corrupt/byzantine upload rejection, exact secure-aggregation dropout
+recovery on the int8 wire, crash-safe checkpoints, and mid-round crash
+recovery (in-process and via a real kill-9 subprocess), plus the
+64-client chaos acceptance run from ISSUE.md.
+"""
+
+import dataclasses
+import itertools
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import secure_agg
+from repro.core.server import BufferedDelta, StalenessBuffer
+from repro.fault import (Fault, FaultPlan, VirtualClock, load_round_state,
+                         save_round_state, validate_deltas)
+from repro.train import checkpoint
+from repro.train.fed_trainer import federated_fit
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mini(n_clients=8, *, clusters=2, per_round=None, seed=0):
+    """Smoke config + bimodal client data (k-means splits low/high)."""
+    cfg = get_smoke_config("fedtime-llama2-7b")
+    cfg = dataclasses.replace(cfg, fedtime=dataclasses.replace(
+        cfg.fedtime, num_clusters=clusters,
+        clients_per_round=per_round or n_clients))
+    ft = cfg.fedtime
+    rng = np.random.default_rng(seed)
+    data = []
+    for i in range(n_clients):
+        shift = 0.0 if i < n_clients // 2 else 5.0
+        data.append(
+            (rng.standard_normal((4, ft.lookback, 2)).astype(np.float32)
+             + shift,
+             rng.standard_normal((4, ft.horizon, 2)).astype(np.float32)
+             + shift))
+    return cfg, data
+
+
+def _reasons(ledger, client=None):
+    return [((r.extra or {}).get("reason"), r.round) for r in ledger.records
+            if not r.participated and (client is None or r.client == client)]
+
+
+# ---------------------------------------------------------------------------
+# virtual clock + fault plans
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock():
+    clk = VirtualClock()
+    assert clk.now() == 0.0
+    clk.advance(1.5)
+    clk.advance_to(1.0)                    # never goes backward
+    assert clk.now() == 1.5
+    clk.advance_to(4.0)
+    assert clk.now() == 4.0
+    with pytest.raises(ValueError):
+        clk.advance(-1.0)
+
+
+def test_fault_plan_timing_and_determinism():
+    plan = FaultPlan({
+        1: [Fault("delay", delay_s=2.0)],
+        2: [Fault("transient", fails=2, backoff_s=0.25)],
+        3: [Fault("crash")],
+        4: [Fault("hang")],
+    }, base_fit_s=1.0)
+    assert plan.attempt(0, 0, 99.0).virtual_s == 1.0   # base_fit_s overrides
+    assert plan.attempt(1, 0, 0.0).virtual_s == 3.0
+    # two failed attempts: (1 + .25) + (1 + .5), then the good one
+    att = plan.attempt(2, 0, 0.0)
+    assert att.virtual_s == pytest.approx(3.75) and att.retries == 2
+    assert not plan.attempt(3, 0, 0.0).uploads
+    assert np.isinf(plan.attempt(4, 0, 0.0).virtual_s)
+    assert not plan.will_upload(3, 0) and not plan.will_upload(4, 0)
+    assert plan.will_upload(2, 0)
+
+    a = FaultPlan.random(32, 0.3, 4, seed=7)
+    b = FaultPlan.random(32, 0.3, 4, seed=7)
+    assert a.faults == b.faults            # bit-identical replay
+    assert FaultPlan.random(32, 0.3, 4, seed=8).faults != a.faults
+
+
+def test_fault_plan_rounds_scoping():
+    plan = FaultPlan({0: [Fault("crash", rounds=frozenset({1}))]})
+    assert plan.will_upload(0, 0) and not plan.will_upload(0, 1)
+    assert plan.kinds_for(0, 1) == ("crash",)
+
+
+def test_validate_deltas_guard():
+    good = {"w": np.ones(4, np.float32)}
+    nan = {"w": np.asarray([np.nan, 1, 1, 1], np.float32)}
+    big = {"w": np.full(4, 1e4, np.float32)}
+    out = validate_deltas([good, good, good, nan, big], byz_k=25.0)
+    assert [ok for ok, _, _ in out] == [True, True, True, False, False]
+    assert out[3][1] == "corrupt" and out[4][1] == "byzantine"
+
+
+def test_staleness_buffer_unit():
+    buf = StalenessBuffer(limit=2, decay=0.5)
+    d = {"w": np.ones(2, np.float32)}
+    buf.add(BufferedDelta(1, 0, 0, ready_at=1.0, weight=4.0, loss=0.1,
+                          delta=d))
+    buf.add(BufferedDelta(2, 0, 0, ready_at=9.0, weight=1.0, loss=0.1,
+                          delta=d))
+    buf.add(BufferedDelta(3, 1, 0, ready_at=1.0, weight=1.0, loss=0.1,
+                          delta=d))                    # other cluster
+    apply, reject = buf.drain(0, 1, window_end=2.0)
+    assert [(e.client, w) for e, w in apply] == [(1, 2.0)]  # 4.0 * 0.5**1
+    assert not reject and len(buf) == 2
+    apply, reject = buf.drain(0, 5, window_end=100.0)  # staleness 5 > 2
+    assert not apply and [(e.client, s) for e, s in reject] == [(2, 5)]
+    with pytest.raises(ValueError):
+        buf.add(BufferedDelta(9, 0, 0, ready_at=float("inf"), weight=1.0,
+                              loss=0.0, delta=d))      # hung uploads never buffer
+
+
+# ---------------------------------------------------------------------------
+# resilient round loop: exclusion, buffering, rejection — all on the
+# virtual clock (each of these completes in seconds of WALL time)
+# ---------------------------------------------------------------------------
+
+def test_slow_clients_shim_runs_without_sleeping():
+    """The legacy slow_clients kwarg now rides the virtual clock: a
+    30-virtual-second straggler must not cost 30 wall seconds, but must
+    still be flagged by the fleet ledger."""
+    cfg, data = _mini(8)
+    t0 = time.monotonic()
+    res = federated_fit(cfg, data, rounds=1, batch_size=4,
+                        key=jax.random.PRNGKey(0),
+                        slow_clients={0: 30.0})
+    assert time.monotonic() - t0 < 25.0        # virtual, not slept
+    rec0 = [r for r in res.fleet.records if r.client == 0][0]
+    assert rec0.participated and rec0.wall_s > 30.0
+    assert 0 in {r.client for r, _ in res.fleet.stragglers()}
+
+
+def test_crash_and_hang_excluded_with_reasons():
+    cfg, data = _mini(6, clusters=1)
+    plan = FaultPlan({0: [Fault("crash")], 1: [Fault("hang")]},
+                     base_fit_s=1.0)
+    res = federated_fit(cfg, data, rounds=2, batch_size=4,
+                        key=jax.random.PRNGKey(0), fault_plan=plan,
+                        deadline_s=10.0)
+    led = res.fleet
+    assert sorted(_reasons(led, 0)) == [("crash", 0), ("crash", 1)]
+    assert sorted(_reasons(led, 1)) == [("hang", 0), ("hang", 1)]
+    # the 4 healthy clients aggregated every round, renormalized
+    for r in (0, 1):
+        assert sum(1 for rec in led.records
+                   if rec.round == r and rec.participated) == 4
+    assert len(res.logs) == 2
+    assert all(np.isfinite(l.train_loss) for l in res.logs)
+    assert led.rejections_by_reason() == {"crash": 2, "hang": 2}
+
+
+def test_deadline_buffering_then_staleness_apply():
+    """A delayed upload misses its window, parks in the staleness buffer,
+    and applies two rounds later with decayed weight."""
+    cfg, data = _mini(6, clusters=1)
+    plan = FaultPlan({2: [Fault("delay", delay_s=2.5,
+                                rounds=frozenset({0}))]},
+                     base_fit_s=0.5)
+    res = federated_fit(cfg, data, rounds=4, batch_size=4,
+                        key=jax.random.PRNGKey(0), fault_plan=plan,
+                        deadline_s=1.0, staleness_limit=2)
+    led = res.fleet
+    # round 0: miss (arrival 3.0 > window end 1.0) -> buffered
+    assert ("deadline", 0) in _reasons(led, 2)
+    # drained at the first window whose end >= 3.0 (round 2), staleness 2
+    drained = [r for r in led.records
+               if r.client == 2 and r.participated and r.extra
+               and "buffered_staleness" in r.extra]
+    assert [(r.round, r.extra["buffered_staleness"]) for r in drained] \
+        == [(2, 2)]
+
+
+def test_deadline_buffering_then_stale_reject():
+    cfg, data = _mini(6, clusters=1)
+    plan = FaultPlan({2: [Fault("delay", delay_s=2.5,
+                                rounds=frozenset({0}))]},
+                     base_fit_s=0.5)
+    res = federated_fit(cfg, data, rounds=4, batch_size=4,
+                        key=jax.random.PRNGKey(0), fault_plan=plan,
+                        deadline_s=1.0, staleness_limit=1)
+    led = res.fleet
+    assert ("deadline", 0) in _reasons(led, 2)
+    assert ("stale", 2) in _reasons(led, 2)     # staleness 2 > limit 1
+    assert not any(r.participated and r.extra
+                   and "buffered_staleness" in r.extra
+                   for r in led.records if r.client == 2)
+
+
+def test_corrupt_and_byzantine_never_aggregate():
+    cfg, data = _mini(6, clusters=1)
+    plan = FaultPlan({0: [Fault("corrupt")],
+                      3: [Fault("byzantine", scale=1e3)]},
+                     base_fit_s=1.0)
+    res = federated_fit(cfg, data, rounds=2, batch_size=4,
+                        key=jax.random.PRNGKey(0), fault_plan=plan,
+                        wire="int8")
+    led = res.fleet
+    assert led.rejections_by_reason() == {"corrupt": 2, "byzantine": 2}
+    # zero NaN/corrupt deltas applied: the server state stays finite
+    for ad in res.adapters_per_cluster:
+        assert all(bool(np.all(np.isfinite(np.asarray(l))))
+                   for l in jax.tree.leaves(ad))
+    assert all(np.isfinite(l.train_loss) for l in res.logs)
+    # rejected uploads carry their bytes per-record but stay out of the
+    # "one number" sums (only aggregated uploads are metered)
+    rej = [r for r in led.records if not r.participated]
+    assert all(r.wire_bytes > 0 for r in rej)
+    by_cluster = led.wire_bytes_by_cluster()
+    assert by_cluster[0] == sum(l.comm.bytes_up for l in res.logs)
+
+
+def test_transient_retries_delay_arrival():
+    cfg, data = _mini(6, clusters=1)
+    plan = FaultPlan({1: [Fault("transient", fails=2, backoff_s=0.25)]},
+                     base_fit_s=1.0)
+    res = federated_fit(cfg, data, rounds=1, batch_size=4,
+                        key=jax.random.PRNGKey(0), fault_plan=plan)
+    rec = [r for r in res.fleet.records if r.client == 1][0]
+    assert rec.participated and rec.wall_s == pytest.approx(3.75)
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation dropout recovery (exact, int8 wire)
+# ---------------------------------------------------------------------------
+
+def test_secure_masks_cancel_exactly_for_every_surviving_subset():
+    """ISSUE satellite: pairwise masks cancel bit-exactly for EVERY
+    surviving subset over the integer wire."""
+    participants = [3, 7, 11, 20, 5]
+    rng = np.random.default_rng(0)
+    codes = {p: rng.integers(-127, 128, size=33).astype(np.int32)
+             for p in participants}
+    masked = {p: secure_agg.mask_codes(codes[p], client_id=p,
+                                       participants=participants,
+                                       round_idx=4)
+              for p in participants}
+    for k in range(1, len(participants) + 1):
+        for survivors in itertools.combinations(participants, k):
+            got = secure_agg.unmask_sum([masked[s] for s in survivors],
+                                        list(survivors),
+                                        participants=participants,
+                                        round_idx=4)
+            want = sum(codes[s] for s in survivors)
+            assert np.array_equal(got, want), survivors
+
+
+def test_secure_encode_error_feedback_composes():
+    """Shared-grid EF: residual stays bounded and the carried error makes
+    the two-round cumulative dequant converge on the true sum."""
+    step = 2.0 ** -10
+    rng = np.random.default_rng(1)
+    x = (rng.standard_normal(257) * 0.01).astype(np.float32)
+    c1, r1 = secure_agg.secure_encode(x, None, step=step)
+    assert np.max(np.abs(r1)) <= step / 2 + 1e-7   # in-range: no clip error
+    c2, r2 = secure_agg.secure_encode(x, r1, step=step)
+    two_rounds = (c1 + c2).astype(np.float32) * np.float32(step)
+    np.testing.assert_allclose(two_rounds + r2, 2 * x, atol=1e-6)
+
+
+def test_secure_dropout_recovery_bit_exact_vs_unmasked():
+    """Masked-with-recovery pipeline == plain partial aggregate, bit for
+    bit, after dequantization."""
+    participants = [0, 1, 2, 3]
+    step = secure_agg.default_step()
+    rng = np.random.default_rng(2)
+    flats = {p: (rng.standard_normal(65) * 0.02).astype(np.float32)
+             for p in participants}
+    codes, masked = {}, {}
+    for p in participants:
+        codes[p], _ = secure_agg.secure_encode(flats[p], None, step=step)
+        masked[p] = secure_agg.mask_codes(codes[p], client_id=p,
+                                          participants=participants,
+                                          round_idx=0)
+    survivors = [0, 2, 3]                     # client 1 dropped mid-round
+    got = secure_agg.secure_decode_sum(
+        secure_agg.unmask_sum([masked[s] for s in survivors], survivors,
+                              participants=participants, round_idx=0),
+        step=step)
+    want = secure_agg.secure_decode_sum(sum(codes[s] for s in survivors),
+                                        step=step)
+    assert got.dtype == np.float32 and np.array_equal(got, want)
+
+
+def test_secure_fit_survives_dropout():
+    """End-to-end: secure int8 aggregation with a hung client — the
+    server recovers the dropped client's masks and the round completes."""
+    cfg, data = _mini(6, clusters=1)
+    plan = FaultPlan({1: [Fault("hang")]}, base_fit_s=1.0)
+    res = federated_fit(cfg, data, rounds=2, batch_size=4,
+                        key=jax.random.PRNGKey(0), fault_plan=plan,
+                        wire="int8", secure_aggregation=True,
+                        deadline_s=5.0)
+    led = res.fleet
+    assert ("hang", 0) in _reasons(led, 1)
+    assert len(res.logs) == 2
+    assert all(np.isfinite(l.train_loss) for l in res.logs)
+    for ad in res.adapters_per_cluster:
+        assert all(bool(np.all(np.isfinite(np.asarray(l))))
+                   for l in jax.tree.leaves(ad))
+
+
+def test_mesh_aggregation_masks_dead_members():
+    """dist.fed partial participation: a crashed member's NaN rows must
+    be structurally excluded (0 * NaN = NaN — weight alone can't), and
+    surviving weights renormalize to sum to 1."""
+    from repro.dist import fed
+
+    tree = {"w": np.stack([np.full((2, 3), float(i)) for i in range(4)]
+                          ).astype(np.float32)}
+    tree["w"][2] = np.nan                      # member 2 crashed mid-write
+    weights = np.asarray([1.0, 2.0, 4.0, 1.0], np.float32)
+    alive = np.asarray([1, 1, 0, 1])
+
+    masked, w = fed.mask_members(tree, weights, alive)
+    assert np.all(np.isfinite(np.asarray(masked["w"])))
+    np.testing.assert_allclose(np.asarray(w), [0.25, 0.5, 0.0, 0.25])
+
+    out = fed.aggregate_adapters(tree, weights, mesh=None, alive=alive)
+    want = 0.25 * 0.0 + 0.5 * 1.0 + 0.25 * 3.0
+    np.testing.assert_allclose(np.asarray(out["w"]), want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoints
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_atomic_no_tmp_residue(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.ones(5, dtype=np.int32)}}
+    p = tmp_path / "ck.msgpack.zst"
+    n = checkpoint.save(str(p), tree)
+    assert n > 0 and p.exists()
+    assert [f for f in os.listdir(tmp_path) if ".tmp." in f] == []
+    back = checkpoint.load(str(p))
+    np.testing.assert_array_equal(np.asarray(back["a"]), tree["a"])
+
+
+def test_checkpoint_refuses_truncation_and_corruption(tmp_path):
+    p = tmp_path / "ck.msgpack.zst"
+    checkpoint.save(str(p), {"a": np.arange(100, dtype=np.float32)})
+    raw = p.read_bytes()
+
+    trunc = tmp_path / "trunc.ckpt"
+    trunc.write_bytes(raw[:-7])
+    with pytest.raises(ValueError, match="truncated checkpoint"):
+        checkpoint.load(str(trunc))
+
+    corr = tmp_path / "corr.ckpt"
+    body = bytearray(raw)
+    body[-3] ^= 0xFF
+    corr.write_bytes(bytes(body))
+    with pytest.raises(ValueError, match="CRC mismatch"):
+        checkpoint.load(str(corr))
+
+
+def test_checkpoint_legacy_headerless_still_loads(tmp_path):
+    p = tmp_path / "new.ckpt"
+    tree = {"a": np.arange(7, dtype=np.float32)}
+    checkpoint.save(str(p), tree)
+    legacy = tmp_path / "legacy.ckpt"
+    legacy.write_bytes(p.read_bytes()[20:])     # strip the header
+    back = checkpoint.load(str(legacy))
+    np.testing.assert_array_equal(np.asarray(back["a"]), tree["a"])
+
+
+def test_round_state_snapshot_roundtrip(tmp_path):
+    p = str(tmp_path / "snap.ckpt")
+    arrays = {"servers": {"0": {"w": np.ones((2, 3), np.float32)}}}
+    meta = {"round": 3, "rng": {"state": 2 ** 100}}   # 128-bit-safe
+    save_round_state(p, arrays, meta)
+    m, a = load_round_state(p)
+    assert m["round"] == 3 and m["rng"]["state"] == 2 ** 100
+    np.testing.assert_array_equal(np.asarray(a["servers"]["0"]["w"]),
+                                  arrays["servers"]["0"]["w"])
+    with pytest.raises(FileNotFoundError):
+        load_round_state(str(tmp_path / "missing.ckpt"))
+
+
+# ---------------------------------------------------------------------------
+# mid-round crash recovery
+# ---------------------------------------------------------------------------
+
+def _leaves(res):
+    return [np.asarray(l) for ad in res.adapters_per_cluster
+            for l in jax.tree.leaves(ad)]
+
+
+def test_snapshot_resume_bit_identical_in_process(tmp_path):
+    """Stop after round 1, resume from the snapshot, and land bit-for-bit
+    on the uninterrupted run's state."""
+    cfg, data = _mini(8)
+    plan = FaultPlan.random(8, 0.25, 3, seed=1)     # deterministic timeline
+    kw = dict(rounds=3, batch_size=4, key=jax.random.PRNGKey(0),
+              fault_plan=plan, deadline_s=2.0, wire="int8")
+
+    full = federated_fit(cfg, data, **kw)
+
+    snap = str(tmp_path / "snap.ckpt")
+    federated_fit(cfg, data, **{**kw, "rounds": 2}, snapshot_path=snap)
+    resumed = federated_fit(cfg, data, **kw, snapshot_path=snap,
+                            resume=True)
+
+    for a, b in zip(_leaves(full), _leaves(resumed)):
+        assert a.dtype == b.dtype and np.array_equal(a, b)
+    assert len(full.logs) == len(resumed.logs)
+    assert [l.train_loss for l in full.logs] == \
+        [l.train_loss for l in resumed.logs]
+    assert len(full.fleet.records) == len(resumed.fleet.records)
+
+
+_CHILD = """
+import dataclasses, os, signal, sys
+import numpy as np, jax
+sys.path.insert(0, os.path.join({repo!r}, "src"))
+from repro.configs import get_smoke_config
+from repro.fault import FaultPlan
+from repro.train.fed_trainer import federated_fit
+
+mode, out = sys.argv[1], sys.argv[2]
+cfg = get_smoke_config("fedtime-llama2-7b")
+cfg = dataclasses.replace(cfg, fedtime=dataclasses.replace(
+    cfg.fedtime, num_clusters=2, clients_per_round=8))
+ft = cfg.fedtime
+rng = np.random.default_rng(0)
+data = []
+for i in range(8):
+    shift = 0.0 if i < 4 else 5.0
+    data.append(
+        (rng.standard_normal((4, ft.lookback, 2)).astype(np.float32) + shift,
+         rng.standard_normal((4, ft.horizon, 2)).astype(np.float32) + shift))
+
+plan = FaultPlan.random(8, 0.25, 3, seed=1)
+kw = dict(rounds=3, batch_size=4, key=jax.random.PRNGKey(0),
+          fault_plan=plan, deadline_s=2.0, wire="int8")
+snap = os.path.join(out, "snap.ckpt")
+
+done = [0]
+def killer(msg):
+    done[0] += 1
+    if done[0] == 3:       # kill-9 mid round 1, right after (1, cluster 0)
+        os.kill(os.getpid(), signal.SIGKILL)
+
+if mode == "crash":
+    federated_fit(cfg, data, **kw, snapshot_path=snap, progress=killer)
+elif mode == "resume":
+    res = federated_fit(cfg, data, **kw, snapshot_path=snap, resume=True)
+elif mode == "full":
+    res = federated_fit(cfg, data, **kw)
+if mode in ("resume", "full"):
+    leaves = [np.asarray(l) for ad in res.adapters_per_cluster
+              for l in jax.tree.leaves(ad)]
+    np.savez(os.path.join(out, mode + ".npz"),
+             losses=np.asarray([l.train_loss for l in res.logs]),
+             **{{str(i): l for i, l in enumerate(leaves)}})
+"""
+
+
+def test_kill9_mid_round_resumes_bit_identical(tmp_path):
+    """ISSUE acceptance: a server killed with SIGKILL mid-run resumes the
+    same round from its snapshot and finishes bit-identically to an
+    uninterrupted run."""
+    script = tmp_path / "child.py"
+    script.write_text(_CHILD.format(repo=REPO))
+    env = {**os.environ, "REPRO_TRACE": "0"}
+
+    def run(mode):
+        return subprocess.run([sys.executable, str(script), mode,
+                               str(tmp_path)], env=env, timeout=560)
+
+    crashed = run("crash")
+    assert crashed.returncode == -signal.SIGKILL    # actually kill-9'd
+    assert (tmp_path / "snap.ckpt").exists()
+    assert run("resume").returncode == 0
+    assert run("full").returncode == 0
+
+    a = np.load(tmp_path / "resume.npz")
+    b = np.load(tmp_path / "full.npz")
+    assert set(a.files) == set(b.files)
+    for k in b.files:
+        assert np.array_equal(a[k], b[k]), k
+
+
+# ---------------------------------------------------------------------------
+# chaos acceptance: 64 clients, >=20% faults, deadline-bounded rounds
+# ---------------------------------------------------------------------------
+
+def test_chaos_64_clients_converges_within_tolerance():
+    """ISSUE acceptance: 64 clients with >=20% injected faults of every
+    kind, every round deadline-bounded, zero NaN applied, and the final
+    loss within 10% of the fault-free baseline."""
+    cfg, data = _mini(64)
+    plan = FaultPlan.random(64, 0.25, 3, seed=3, base_fit_s=1.0)
+    assert plan.fault_rate(64) >= 0.20
+    kinds = {f.kind for fs in plan.faults.values() for f in fs}
+    assert kinds == {"crash", "hang", "transient", "corrupt", "byzantine"}
+
+    deadline = 3.0
+    chaos = federated_fit(cfg, data, rounds=3, batch_size=4,
+                          key=jax.random.PRNGKey(0), fault_plan=plan,
+                          deadline_s=deadline, wire="int8")
+    clean = federated_fit(cfg, data, rounds=3, batch_size=4,
+                          key=jax.random.PRNGKey(0), wire="int8")
+
+    led = chaos.fleet
+    # faults actually fired and were audited
+    rej = led.rejections_by_reason()
+    assert sum(rej.values()) > 0 and set(rej) <= {
+        "crash", "hang", "deadline", "corrupt", "byzantine", "stale"}
+    # every on-time aggregated upload landed inside its window
+    for r in led.records:
+        if r.participated and not (r.extra or {}).get("buffered_staleness"):
+            assert r.wall_s <= deadline + 1e-9
+    # zero NaN/corrupt deltas applied
+    for ad in chaos.adapters_per_cluster:
+        assert all(bool(np.all(np.isfinite(np.asarray(l))))
+                   for l in jax.tree.leaves(ad))
+    # the ledger's "one number" invariant holds under faults too
+    by_cluster = led.wire_bytes_by_cluster()
+    want = {}
+    for log in chaos.logs:
+        want[log.cluster] = want.get(log.cluster, 0) + log.comm.bytes_up
+    assert by_cluster == want
+
+    def final_loss(res):
+        last = max(l.round for l in res.logs)
+        return float(np.mean([l.train_loss for l in res.logs
+                              if l.round == last]))
+
+    lf, lc = final_loss(chaos), final_loss(clean)
+    assert np.isfinite(lf) and np.isfinite(lc)
+    assert abs(lf - lc) <= 0.10 * abs(lc), (lf, lc)

@@ -31,11 +31,21 @@ fleet-shaped request mix a federated deployment actually sees), reporting
 share-hit / full-hit / swap rates plus per-cluster TTFT percentiles rolled
 up through the mergeable fleet ledger.
 
+Row 5 — serving chaos: a staggered bounded-queue trace with ~25% injected
+request-level faults (malformed prompts, NaN-poisoned lanes, unmeetable
+deadlines, submit bursts) on the virtual clock, with the write-ahead
+request journal armed.  Shed requests retry after their ``retry_after_s``
+hint; the row reports shed/quarantine/deadline counters and the gated
+invariants: zero greedy mismatches among survivors, zero requests left
+unfinished after journal replay, one compiled serve_step signature.
+
 Rows land in BENCH_serving.json via benchmarks/run.py.
 """
 
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
@@ -365,6 +375,126 @@ def _zipf_trace_case(full: bool):
     return row
 
 
+def _chaos_case(full: bool):
+    """Fault-injected serving trace (ISSUE 10 acceptance shape): ~25% of
+    the requests carry one request-scoped fault, backpressure sheds under
+    a bounded queue (shed clients retry), SLOs run on the virtual clock,
+    and every event is journaled.  Deterministic end to end — every gated
+    number is scheduling arithmetic, not wall clock."""
+    from repro.configs import get_smoke_config
+    from repro.fault import FaultPlan
+    from repro.fault.clock import VirtualClock
+    from repro.models.registry import get_model
+    from repro.serve import Request, replay_journal
+
+    cfg = get_smoke_config("qwen3-0.6b")
+    api = get_model(cfg)
+    params = api.init(cfg, jax.random.PRNGKey(4))
+
+    n_req = 24 if full else 16
+    # seed 26 draws one fault of EACH request-scoped kind at exactly 25%
+    plan = FaultPlan.random_serving(n_req, 0.25, seed=26)
+    cache_len, step_s, max_queue = 48, 0.1, 2
+    lens, gens = [6, 9, 7, 11], [5, 3, 6, 4]
+    rng = np.random.default_rng(17)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            lens[i % 4]).astype(np.int32)
+               for i in range(n_req)]
+
+    # fault-free reference: each request solo through the same kernels
+    one = _sequential_baseline(api, cfg, params, None, cache_len)
+    refs = {f"q{i}": one(prompts[i].tolist(), gens[i % 4])
+            for i in range(n_req) if plan.kind_for(i) != "malformed"}
+
+    jrnl = os.path.join(tempfile.mkdtemp(prefix="repro_chaos_"),
+                        "req.jrnl")
+    from repro.serve import ForecastEngine
+    eng = ForecastEngine(cfg, params, num_slots=2, cache_len=cache_len,
+                         clock=VirtualClock(), step_time_s=step_s,
+                         max_queue=max_queue, journal=jrnl)
+
+    def build(i):
+        kind = plan.kind_for(i)
+        prompt = prompts[i]
+        if kind == "malformed":
+            prompt = plan.malform_prompt(i, prompt, cfg.vocab_size)
+        return Request(id=f"q{i}", prompt=prompt,
+                       max_new_tokens=gens[i % 4],
+                       deadline_s=0.05 if kind == "deadline" else None)
+
+    pending = sorted((0 if plan.kind_for(i) == "burst" else i // 3, i)
+                     for i in range(n_req))
+    shed_events, t = 0, 0
+    t0 = time.perf_counter()
+    while pending or eng.scheduler.pending or eng.active_requests:
+        if t >= 2000:
+            break
+        still = []
+        for (due, i) in pending:
+            if due > t:
+                still.append((due, i))
+                continue
+            v = eng.submit(build(i))
+            if plan.kind_for(i) == "poison" and v.ok:
+                eng.poison(f"q{i}")
+            if v.verdict == "shed":
+                shed_events += 1
+                still.append((t + int(v.retry_after_s / step_s) + 1, i))
+            elif v.shed_id is not None:        # displaced victim retries
+                shed_events += 1
+                j = int(v.shed_id[1:])
+                still.append(
+                    (t + int(eng.shed_log[v.shed_id] / step_s) + 1, j))
+        pending = sorted(still)
+        eng.step()
+        t += 1
+    wall = time.perf_counter() - t0
+    done = eng.finished
+    eng.journal.close()
+    state = replay_journal(jrnl)
+
+    # survivors: clean finishes must match the fault-free run exactly;
+    # a deadline-cancelled request's partial output must be a prefix
+    mismatches = 0
+    for rid, fin in done.items():
+        got = fin.tokens.tolist()
+        if fin.reason in ("length", "eos"):
+            mismatches += got != refs[rid]
+        elif fin.reason in ("deadline", "ttft_slo"):
+            mismatches += got != refs[rid][:len(got)]
+    summ = eng.metrics.summary()
+    row = {
+        "name": "serving_chaos",
+        "requests": n_req,
+        "injected_fault_rate": round(plan.fault_rate(n_req), 3),
+        "faults": {k: len(plan.indices(k))
+                   for k in sorted(set(plan.faults.values()))},
+        "max_queue": max_queue,
+        "slots": 2,
+        "cache_len": cache_len,
+        "step_time_s": step_s,
+        "engine_steps": t,
+        "shed_events": shed_events,
+        "shed_rate": round(shed_events / n_req, 3),
+        "quarantined": summ["quarantined"],
+        "deadline_misses": summ["deadline_misses"],
+        "ttft_slo_misses": summ["ttft_slo_misses"],
+        "deadline_miss_rate": round(summ["deadline_miss_rate"], 3),
+        "unaccounted": n_req - len(done) - len(eng.quarantined),
+        "greedy_mismatches": mismatches,
+        # the crash-recovery invariant: after the run the journal must
+        # replay to NOTHING outstanding (every submit has its terminal)
+        "unfinished": len(state.unfinished_ids),
+        "journal_records": state.records,
+        "journal_torn": int(state.torn),
+        "tok_per_s": round(
+            sum(len(f.tokens) for f in done.values()) / wall, 2),
+        "serve_step_signatures": eng.num_step_signatures(),
+    }
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    return row
+
+
 def run(full: bool = False):
     from repro.configs import get_smoke_config
     from repro.launch.serve import make_trace
@@ -433,7 +563,7 @@ def run(full: bool = False):
     }
     print(",".join(f"{k}={v}" for k, v in row.items()))
     return [row, _paged_vs_contiguous_case(full), _cluster_skew_case(full),
-            _zipf_trace_case(full)]
+            _zipf_trace_case(full), _chaos_case(full)]
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ Fault tolerance additions:
     deltas ("async" aggregation on the virtual clock).  Deltas arriving
     after a round's deadline buffer until the cluster's next aggregation;
     a drained delta ``s`` rounds old is down-weighted by ``decay**s`` and
-    rejected outright beyond ``limit`` rounds — bounded staleness, so the
+    rejected outright at or beyond ``limit`` rounds — bounded staleness, so the
     round clock is set by the deadline rather than by the slowest of
     millions of clients.
 """
@@ -94,7 +94,15 @@ class StalenessBuffer:
     """Bounded-staleness accumulation of late deltas; see module
     docstring.  ``drain`` returns ``(apply, reject)``: entries whose
     arrival fell inside the closing window, split by the staleness bound,
-    with each applied entry's weight pre-multiplied by ``decay**s``."""
+    with each applied entry's weight pre-multiplied by ``decay**s``.
+
+    Boundary semantics: ``limit`` is EXCLUSIVE — an entry whose staleness
+    equals ``limit`` is rejected, on this path and on the trainer's apply
+    path alike (both call :meth:`is_stale`, one predicate for both sides;
+    the old ``> limit`` drain test accepted the boundary while the apply
+    side's documentation promised rejection).  ``limit`` must therefore be
+    >= 2 for any buffered delta to ever apply, since :meth:`staleness_of`
+    floors staleness at 1."""
 
     def __init__(self, limit: int = 2, decay: float = 0.5):
         if limit < 0 or not (0.0 < decay <= 1.0):
@@ -103,6 +111,18 @@ class StalenessBuffer:
         self.limit = limit
         self.decay = decay
         self.entries: List[BufferedDelta] = []
+
+    @staticmethod
+    def staleness_of(round_idx: int, origin_round: int) -> int:
+        """Rounds a buffered delta has aged: floored at 1 (a delta drained
+        in the round after its origin is 1 round stale).  The single
+        definition both the drain and the trainer's apply path use."""
+        return max(round_idx - origin_round, 1)
+
+    def is_stale(self, staleness: int) -> bool:
+        """True when ``staleness`` is at or beyond ``limit`` — the one
+        boundary predicate shared by ``drain`` and the apply path."""
+        return staleness >= self.limit
 
     def add(self, entry: BufferedDelta) -> None:
         if not math.isfinite(entry.ready_at):
@@ -125,8 +145,8 @@ class StalenessBuffer:
         self.entries = [e for e in self.entries if id(e) not in taken]
         apply, reject = [], []
         for e in ready:
-            staleness = max(round_idx - e.origin_round, 1)
-            if staleness > self.limit:
+            staleness = self.staleness_of(round_idx, e.origin_round)
+            if self.is_stale(staleness):
                 reject.append((e, staleness))
             else:
                 apply.append((e, e.weight * self.decay ** staleness))

@@ -28,16 +28,26 @@ exception.  This package gives the federated trainer the machinery to
 snapshot_path=...)`` threads all four together; every injected fault,
 rejection, retry, and recovery emits through ``repro.obs`` (fleet-ledger
 reasons + flight-recorder distress instants).
+
+The same machinery extends into the *serve* layer:
+:class:`~repro.fault.plan.ServingFaultPlan` schedules request-scoped
+faults (malformed prompt, NaN poison, deadline-buster, submit burst,
+engine kill), :func:`~repro.fault.guard.logits_finite` is the in-jit
+per-lane screen the serve step runs on every decode slice, and
+:class:`VirtualClock` paces request deadlines/TTFT SLOs in
+``serve/engine.py`` — see the README "Serving fault tolerance" section.
 """
 
 from repro.fault.clock import VirtualClock
-from repro.fault.guard import delta_norm, validate_deltas
-from repro.fault.plan import FAULT_KINDS, Attempt, Fault, FaultPlan
+from repro.fault.guard import delta_norm, logits_finite, validate_deltas
+from repro.fault.plan import (FAULT_KINDS, SERVE_FAULT_KINDS, Attempt,
+                              Fault, FaultPlan, ServingFaultPlan)
 from repro.fault.snapshot import (SNAPSHOT_SCHEMA, load_round_state,
                                   save_round_state)
 
 __all__ = [
-    "Attempt", "FAULT_KINDS", "Fault", "FaultPlan", "SNAPSHOT_SCHEMA",
-    "VirtualClock", "delta_norm", "load_round_state", "save_round_state",
+    "Attempt", "FAULT_KINDS", "Fault", "FaultPlan", "SERVE_FAULT_KINDS",
+    "SNAPSHOT_SCHEMA", "ServingFaultPlan", "VirtualClock", "delta_norm",
+    "load_round_state", "logits_finite", "save_round_state",
     "validate_deltas",
 ]

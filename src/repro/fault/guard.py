@@ -27,7 +27,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["delta_norm", "validate_deltas"]
+__all__ = ["delta_norm", "logits_finite", "validate_deltas"]
+
+
+def logits_finite(logits):
+    """Per-lane finite screen for a ``(B, V)`` logits slice, traceable
+    inside jit — the serving mirror of the **finite** delta screen.
+
+    Returns a ``(B,)`` bool vector: ``False`` where any entry of that
+    lane's vocab row is NaN/Inf.  The serve step evaluates this on every
+    decode step's last-position logits so a poisoned request is caught
+    the step it turns non-finite, *before* its sampled token is emitted;
+    the engine quarantines only the offending lane (``ok`` is per-lane,
+    so neighbours in the same ragged batch are untouched)."""
+    return jnp.all(jnp.isfinite(logits), axis=-1)
 
 
 def delta_norm(tree) -> float:

@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["FAULT_KINDS", "Fault", "FaultPlan", "Attempt"]
+__all__ = ["FAULT_KINDS", "SERVE_FAULT_KINDS", "Fault", "FaultPlan",
+           "Attempt", "ServingFaultPlan"]
 
 #: crash   — client computes but dies before upload (nothing arrives)
 #: hang    — client never returns (arrival at +inf; the deadline excludes it)
@@ -38,6 +39,20 @@ __all__ = ["FAULT_KINDS", "Fault", "FaultPlan", "Attempt"]
 #: byzantine — upload arrives scaled by ``scale`` (norm attack)
 #: delay   — upload arrives ``delay_s`` virtual seconds late
 FAULT_KINDS = ("crash", "hang", "transient", "corrupt", "byzantine", "delay")
+
+#: Request-scoped fault kinds for the *serving* chaos harness
+#: (``ServingFaultPlan``), one per request rather than per client:
+#: malformed — prompt carries out-of-vocabulary token ids (quarantined at
+#:             submit, before any device work)
+#: poison    — NaN injected into the request's logits row mid-decode
+#:             (quarantined by the in-step guard; neighbours untouched)
+#: deadline  — the request's deadline is set tighter than its decode can
+#:             finish (cancelled mid-decode with full reclamation)
+#: burst     — the request arrives inside a submit burst that overflows
+#:             the bounded queue (exercises cost-aware load shedding)
+#: kill      — the engine process is SIGKILL'd while this request is
+#:             mid-decode (journal replay must resume it bit-identically)
+SERVE_FAULT_KINDS = ("malformed", "poison", "deadline", "burst", "kill")
 
 
 @dataclass(frozen=True)
@@ -187,3 +202,76 @@ class FaultPlan:
                 active = frozenset({int(rng.integers(max(rounds, 1)))})
             faults[cid] = [Fault(kind, rounds=active)]
         return cls(faults, base_fit_s=base_fit_s, seed=seed)
+
+    @classmethod
+    def random_serving(cls, n_requests: int, rate: float, *,
+                       seed: int = 0,
+                       kinds: Tuple[str, ...] = SERVE_FAULT_KINDS[:4]
+                       ) -> "ServingFaultPlan":
+        """Request-scoped chaos for the serving harness: ~``rate`` of the
+        requests (by index in submission order) each get one fault kind.
+        Deterministic from ``seed``, like :meth:`random`.  ``kill`` is
+        excluded from the default kinds because the harness injects the
+        engine SIGKILL at a chosen step rather than per request."""
+        return ServingFaultPlan.random(n_requests, rate, seed=seed,
+                                       kinds=kinds)
+
+
+# ---------------------------------------------------------------------------
+# Request-scoped serving faults
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServingFaultPlan:
+    """Per-*request* fault schedule for the serving chaos harness.
+
+    Maps a request's index in submission order to one of
+    :data:`SERVE_FAULT_KINDS`.  The harness consumes it declaratively:
+    ``malformed`` rewrites the prompt via :meth:`malform_prompt` before
+    submit, ``poison`` arms the engine's NaN injector for that request id,
+    ``deadline`` submits with an unmeetable deadline, ``burst`` batches
+    the submit into an overflow burst, ``kill`` marks where the harness
+    SIGKILLs the engine.  Deterministic from construction (or
+    :meth:`random`'s seed), so a chaos trace replays bit-identically."""
+
+    faults: Dict[int, str] = field(default_factory=dict)
+    seed: int = 0
+
+    def __post_init__(self):
+        for idx, kind in self.faults.items():
+            if kind not in SERVE_FAULT_KINDS:
+                raise ValueError(f"serving fault kind {kind!r} for request "
+                                 f"{idx}: choose from {SERVE_FAULT_KINDS}")
+
+    def kind_for(self, request_idx: int) -> Optional[str]:
+        return self.faults.get(int(request_idx))
+
+    def indices(self, kind: str) -> Tuple[int, ...]:
+        """Request indices carrying ``kind``, in submission order."""
+        return tuple(sorted(i for i, k in self.faults.items() if k == kind))
+
+    def fault_rate(self, n_requests: int) -> float:
+        return len(self.faults) / max(n_requests, 1)
+
+    def malform_prompt(self, request_idx: int, prompt: np.ndarray,
+                       vocab_size: int) -> np.ndarray:
+        """Deterministically damage one prompt token to an
+        out-of-vocabulary id (the submit-time validator must catch it)."""
+        rng = np.random.default_rng((self.seed, int(request_idx)))
+        bad = np.array(prompt, dtype=np.int32, copy=True)
+        bad[int(rng.integers(bad.shape[0]))] = vocab_size + int(
+            rng.integers(1, 7))
+        return bad
+
+    @classmethod
+    def random(cls, n_requests: int, rate: float, *, seed: int = 0,
+               kinds: Tuple[str, ...] = SERVE_FAULT_KINDS[:4]
+               ) -> "ServingFaultPlan":
+        """~``rate`` of the requests each get one uniformly-chosen fault
+        kind; same seed → same plan, bit for bit."""
+        rng = np.random.default_rng(seed)
+        faults: Dict[int, str] = {}
+        for idx in range(n_requests):
+            if rng.random() < rate:
+                faults[idx] = kinds[int(rng.integers(len(kinds)))]
+        return cls(faults, seed=seed)

@@ -15,6 +15,13 @@ lengths; ``--requests FILE`` replays a JSON trace instead (a list of
 objects with ``prompt`` or ``prompt_len``, ``max_new_tokens``, and optional
 ``arrival_step`` / ``temperature`` / ``top_k`` / ``top_p`` / ``seed``).
 
+Fault tolerance (engine mode): ``--max-queue`` bounds the submit queue
+with cost-aware load shedding, ``--deadline-s`` / ``--ttft-slo-s`` attach
+default SLOs (cancelled mid-decode on miss), ``--journal PATH`` arms the
+write-ahead request journal for crash recovery, and ``--virtual-clock`` /
+``--step-time-s`` run the SLO clock deterministically.  Shed / quarantine
+verdicts print per request; the summary grows a fault-tolerance line.
+
 ``--trace-out PATH`` dumps the run's ``repro.obs`` span timeline (request
 lifecycles, engine decode steps, pool-utilization counters) as Chrome
 trace-event JSON — open it at https://ui.perfetto.dev or chrome://tracing.
@@ -76,11 +83,15 @@ def load_trace(path: str, cfg, *, gen: int, seed: int = 0):
 
 def _to_request(r: dict):
     from repro.serve import Request, SamplingParams
+    deadline = r.get("deadline_s")
+    ttft_slo = r.get("ttft_slo_s")
     return Request(
         id=r["id"], prompt=np.asarray(r["prompt"], np.int32),
         max_new_tokens=r["max_new_tokens"],
         arrival_step=r.get("arrival_step", 0),
         eos_id=r.get("eos_id"),
+        deadline_s=None if deadline is None else float(deadline),
+        ttft_slo_s=None if ttft_slo is None else float(ttft_slo),
         sampling=SamplingParams(
             temperature=float(r.get("temperature", 0.0)),
             top_k=int(r.get("top_k", 0)),
@@ -92,6 +103,8 @@ def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
                max_tokens_in_flight: int = 0, prefill_chunk: int = 0,
                prefill_bucket: int = 0, paged=None, block_size: int = 0,
                pool_blocks: int = 0, share_prefixes=None, swap_tier=None,
+               max_queue=None, deadline_s=None, ttft_slo_s=None,
+               journal=None, clock=None, step_time_s=None,
                quiet: bool = False):
     from repro.serve import ForecastEngine
     engine = ForecastEngine(cfg, params, num_slots=slots,
@@ -102,9 +115,21 @@ def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
                             paged=paged, block_size=block_size,
                             pool_blocks=pool_blocks,
                             share_prefixes=share_prefixes,
-                            swap_tier=swap_tier)
+                            swap_tier=swap_tier,
+                            max_queue=max_queue,
+                            default_deadline_s=deadline_s,
+                            default_ttft_slo_s=ttft_slo_s,
+                            journal=journal, clock=clock,
+                            step_time_s=step_time_s)
     for r in trace:
-        engine.submit(_to_request(r))
+        verdict = engine.submit(_to_request(r))
+        if not verdict.ok and not quiet:
+            # surface backpressure to the caller: a shed request should be
+            # retried after retry_after_s, a quarantined one should not
+            print(f"submit {verdict.id}: {verdict.verdict}"
+                  + (f" (retry after {verdict.retry_after_s:.2f}s)"
+                     if verdict.verdict == "shed" else "")
+                  + (f" [{verdict.reason}]" if verdict.reason else ""))
     done = engine.run()
     summ = engine.metrics.summary()
     if not quiet:
@@ -125,6 +150,15 @@ def run_engine(cfg, params, trace, *, slots: int, cache_len: int,
               f"{summ['peak_fragmentation']:.2f} peak, "
               f"compiled serve_step signatures: "
               f"{engine.num_step_signatures()}")
+        if (summ["shed"] or summ["deadline_misses"] or summ["quarantined"]
+                or engine.journal is not None):
+            print(f"        fault tolerance: {summ['shed']} shed, "
+                  f"{summ['deadline_misses']} deadline-missed "
+                  f"({summ['ttft_slo_misses']} TTFT-SLO), "
+                  f"{summ['quarantined']} quarantined, "
+                  f"deadline miss rate {summ['deadline_miss_rate']:.3f}"
+                  + (f", journal {engine.journal.path}"
+                     if engine.journal is not None else ""))
         if engine.paged and (engine.share_prefixes or engine.swap_tier):
             print(f"        prefix sharing: {summ['share_hits']} hits "
                   f"({summ['full_prompt_hits']} full-prompt, "
@@ -243,6 +277,31 @@ def main() -> None:
     ap.add_argument("--no-swap-tier", dest="swap_tier", action="store_const",
                     const=False,
                     help="disable the swap tier (displaced lanes recompute)")
+    # fault tolerance (engine mode; see repro.serve.engine docstring)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded submit queue: admission backpressure "
+                         "sheds the cheapest-to-retry queued request when "
+                         "full (0 = unbounded; REPRO_SERVE_MAX_QUEUE)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default whole-request deadline in engine-clock "
+                         "seconds (REPRO_SERVE_DEADLINE_S); per-request "
+                         "deadline_s in a --requests trace overrides")
+    ap.add_argument("--ttft-slo-s", type=float, default=None,
+                    help="default first-token SLO in engine-clock seconds "
+                         "(REPRO_SERVE_TTFT_SLO_S)")
+    ap.add_argument("--journal", default="",
+                    help="write-ahead request journal path: submits/tokens/"
+                         "finishes are logged so a crashed engine replays "
+                         "unfinished requests bit-identically "
+                         "(REPRO_SERVE_JOURNAL)")
+    ap.add_argument("--virtual-clock", action="store_true",
+                    help="run SLO deadlines on fault.clock.VirtualClock "
+                         "(each engine step advances --step-time-s) instead "
+                         "of wall time — deterministic deadline tests")
+    ap.add_argument("--step-time-s", type=float, default=None,
+                    help="virtual seconds per engine step under "
+                         "--virtual-clock (REPRO_SERVE_STEP_S, default "
+                         "0.05)")
     ap.add_argument("--trace-out", default="",
                     help="write the repro.obs span timeline as Chrome "
                          "trace-event JSON (Perfetto / chrome://tracing)")
@@ -272,6 +331,10 @@ def main() -> None:
                                rate=args.arrival_rate, seed=args.trace_seed)
         cache_len = args.cache_len or max(
             len(r["prompt"]) + r["max_new_tokens"] for r in trace)
+        clock = None
+        if args.virtual_clock:
+            from repro.fault.clock import VirtualClock
+            clock = VirtualClock()
         run_engine(cfg, params, trace, slots=args.slots, cache_len=cache_len,
                    max_tokens_in_flight=args.max_tokens_in_flight,
                    prefill_chunk=args.prefill_chunk,
@@ -279,7 +342,12 @@ def main() -> None:
                    paged=args.paged, block_size=args.block_size,
                    pool_blocks=args.pool_blocks,
                    share_prefixes=args.share_prefixes,
-                   swap_tier=args.swap_tier)
+                   swap_tier=args.swap_tier,
+                   max_queue=args.max_queue or None,
+                   deadline_s=args.deadline_s,
+                   ttft_slo_s=args.ttft_slo_s,
+                   journal=args.journal or None,
+                   clock=clock, step_time_s=args.step_time_s)
     else:
         run_fixed_batch(cfg, params, api, batch=args.batch,
                         prompt_len=args.prompt_len, gen=args.gen)

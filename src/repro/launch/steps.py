@@ -135,7 +135,7 @@ def make_prefill_step(cfg: ModelConfig, *, force_window: int = 0):
 
 
 def make_serve_step(cfg: ModelConfig, *, force_window: int = 0,
-                    sampling: bool = False):
+                    sampling: bool = False, guard: bool = False):
     """One-token decode step.  Attention over the ring cache runs the fused
     flash-decode path (Pallas on TPU, blockwise XLA elsewhere; int8 caches
     dequantized tile-by-tile in the streamed pass); REPRO_FLASH_DECODE=0
@@ -159,7 +159,16 @@ def make_serve_step(cfg: ModelConfig, *, force_window: int = 0,
     ``top_p`` ((B,) arrays), base PRNG keys ``key`` ((B, 2) uint32) and
     per-slot sample counters ``t`` ((B,)), routing logits through
     ``repro.serve.sampling.sample_vec`` (rows with temperature <= 0 stay
-    greedy — bit-identical to the argmax path)."""
+    greedy — bit-identical to the argmax path).
+
+    ``guard=True`` (the fault-tolerant engine's step) additionally reads a
+    (B,) bool ``poison`` batch row — the chaos harness's in-jit NaN
+    injector, which overwrites a poisoned lane's logits row with NaN
+    *before* sampling — and returns ``(next_token, ok, new_cache)`` where
+    ``ok`` is ``fault.guard.logits_finite`` evaluated per lane on the
+    post-injection logits slice (inactive lanes report ok, they produced
+    nothing).  The injector and the screen live in the same compiled step
+    so arming/disarming chaos never adds a jit signature."""
     api = get_model(cfg)
 
     def serve_step(params, cache, batch):
@@ -167,6 +176,12 @@ def make_serve_step(cfg: ModelConfig, *, force_window: int = 0,
         logits, new_cache = api.decode_step(params, cfg, cache, batch,
                                             force_window=force_window)
         lg = logits[:, -1, :]
+        if guard:
+            from repro.fault.guard import logits_finite
+            poison = jnp.asarray(batch["poison"], bool)
+            lg = jnp.where(poison[:, None], jnp.asarray(jnp.nan, lg.dtype),
+                           lg)
+            ok = logits_finite(lg)
         if sampling:
             from repro.serve.sampling import sample_vec
             keys = jax.vmap(jax.random.fold_in)(batch["key"], batch["t"])
@@ -185,6 +200,10 @@ def make_serve_step(cfg: ModelConfig, *, force_window: int = 0,
                                             cache_batch_axes(api, cfg))
             next_token = jnp.where(active[:, None], next_token,
                                    batch["token"])
+            if guard:
+                ok = ok | ~active          # inactive lanes produced nothing
+        if guard:
+            return next_token, ok, new_cache
         return next_token, new_cache
 
     return serve_step

@@ -226,6 +226,24 @@ GATES: Dict[str, List[GateSpec]] = {
         GateSpec({"name": "serving_zipf_trace"},
                  "share_hit_rate", "higher", rel_tol=0.0, bound=0.5),
         GateSpec({"name": "serving_zipf_trace"}, "unfinished", "exact"),
+        # Serving chaos: under injected request faults (malformed prompts,
+        # poisoned logits, unmeetable deadlines, arrival bursts) every
+        # survivor must stay bit-identical to its solo greedy reference,
+        # the journal must replay to zero unfinished requests, and the
+        # fault paths must not add jit signatures. Absolute zero bounds —
+        # "exact" would only compare against a (possibly wrong) baseline.
+        GateSpec({"name": "serving_chaos"}, "greedy_mismatches", "lower",
+                 rel_tol=0.0, bound=0.0),
+        GateSpec({"name": "serving_chaos"}, "unfinished", "lower",
+                 rel_tol=0.0, bound=0.0),
+        GateSpec({"name": "serving_chaos"}, "unaccounted", "lower",
+                 rel_tol=0.0, bound=0.0),
+        GateSpec({"name": "serving_chaos"}, "serve_step_signatures",
+                 "exact"),
+        # load shedding must actually engage under the burst (observed
+        # shed_rate 0.625 at seed 26; generous floor)
+        GateSpec({"name": "serving_chaos"}, "shed_rate", "higher",
+                 rel_tol=0.0, bound=0.25),
     ],
     "collectives": [
         # wire-byte fractions are exact chunk-plan arithmetic: zero tol

@@ -1,12 +1,18 @@
 """repro.serve — forecast-serving: sampling + the continuous-batching
-engine (engine / scheduler / cache_pool / request / metrics)."""
+engine (engine / scheduler / cache_pool / request / metrics), with
+request-level fault tolerance (SLO deadlines, load shedding, poison
+quarantine) and a crash-recoverable write-ahead request journal."""
 
 from repro.serve.cache_pool import (BlockAllocator, CachePool,
                                     PagedCachePool)
 from repro.serve.engine import ForecastEngine
-from repro.serve.request import FinishedRequest, Request, SamplingParams
+from repro.serve.journal import JournalState, RequestJournal, replay_journal
+from repro.serve.request import (FinishedRequest, QuarantinedRequest,
+                                 Request, SamplingParams, SubmitVerdict)
 from repro.serve.scheduler import FIFOScheduler, SchedulerConfig
 
 __all__ = ["ForecastEngine", "Request", "SamplingParams", "FinishedRequest",
-           "FIFOScheduler", "SchedulerConfig", "CachePool", "PagedCachePool",
-           "BlockAllocator"]
+           "SubmitVerdict", "QuarantinedRequest", "FIFOScheduler",
+           "SchedulerConfig", "CachePool", "PagedCachePool",
+           "BlockAllocator", "RequestJournal", "JournalState",
+           "replay_journal"]

@@ -447,6 +447,13 @@ class PagedCachePool(_LanePool):
         prefill whose occupied ring extent is ``extent`` tokens."""
         return -(-min(extent, self.ring_len) // self.block_size)
 
+    def lane_blocks(self, slot: int) -> int:
+        """Physical blocks currently mapped by ``slot``'s table row — the
+        reclamation size the engine audits when a lane is swapped out or
+        cancelled (shared blocks count too: the sharer holds a reference
+        even though release may not free them)."""
+        return int((self.table[slot] >= 0).sum())
+
     @property
     def block_bytes(self) -> int:
         """HBM bytes of one physical block across every leaf (all layers) —

@@ -60,6 +60,44 @@ each sharer.
     engine.submit(Request(id="r0", prompt=toks, max_new_tokens=32))
     done = engine.run()              # {id: FinishedRequest}
 
+Fault tolerance (the serving mirror of ``repro.fault``'s training story):
+
+  * **SLOs** — requests may carry ``deadline_s`` (whole-request) and
+    ``ttft_slo_s`` (first-token) windows, measured on the engine clock
+    from first submit.  With a ``fault.clock.VirtualClock`` the engine
+    advances ``step_time_s`` virtual seconds per tick (no ``time.sleep``
+    anywhere); without one it reads ``time.perf_counter()``.  A sweep at
+    the top of every tick cancels expired queued AND resident requests
+    mid-decode with full reclamation — lane batch rows zeroed, blocks
+    released (refcounts/partition preserved), swap handles dropped — and
+    audits each as a ``serve.deadline_miss`` instant + a finished record
+    with reason ``"deadline"``/``"ttft_slo"`` carrying partial tokens.
+  * **Backpressure** — ``max_queue`` bounds the submit queue; on overflow
+    the engine sheds the cheapest-to-retry candidate (fewest total
+    tokens, newest-first on ties, NEVER a request past first token —
+    resumes are exempt) and ``submit`` returns a ``SubmitVerdict`` with a
+    deterministic ``retry_after_s`` hint instead of raising.
+  * **Quarantine** — ``submit`` screens prompts against the vocab
+    (malformed requests quarantine before touching the device);
+    ``fault.guard.logits_finite`` runs inside the compiled step on every
+    decode slice, and a lane going non-finite is quarantined alone: no
+    token emitted, blocks released, neighbours' lanes untouched, audit in
+    ``engine.quarantined`` + a flight-recorder repro bundle.  The chaos
+    NaN injector (``engine.poison(id)``) rides the same step via a
+    ``poison`` batch row, so arming it never adds a jit signature.
+  * **Journal** — ``journal=`` (or ``REPRO_SERVE_JOURNAL``) write-ahead
+    logs submits/tokens/finishes (``serve/journal.py``, per-record CRC +
+    fsync); after a crash ``replay_journal(path).unfinished_requests()``
+    resubmits every incomplete request with its generated tokens as
+    resume state — decode continues bit-identically (the fold_in sample
+    counter continues), zero lost or duplicated requests.
+
+Env knobs (each the default for the corresponding ctor arg):
+``REPRO_SERVE_MAX_QUEUE`` (int, 0 = unbounded), ``REPRO_SERVE_DEADLINE_S``
+/ ``REPRO_SERVE_TTFT_SLO_S`` (floats, applied to requests that don't set
+their own), ``REPRO_SERVE_STEP_S`` (virtual seconds per tick under a
+virtual clock, default 0.05), ``REPRO_SERVE_JOURNAL`` (journal path).
+
 Observability (``repro.obs``, ``REPRO_TRACE=0`` disables): every request
 gets its own Perfetto track carrying the lifecycle
 ``req.submit -> req.queued -> req.prefill -> req.first_token ->
@@ -86,12 +124,15 @@ import numpy as np
 
 from repro import obs
 from repro.configs.base import ModelConfig
+from repro.fault.clock import VirtualClock
 from repro.launch.steps import make_serve_step
 from repro.models.registry import get_model
 from repro.serve.cache_pool import (PAGED_FAMILIES, CachePool,
                                     PagedCachePool)
+from repro.serve.journal import RequestJournal
 from repro.serve.metrics import EngineMetrics
-from repro.serve.request import FinishedRequest, GenState, Request
+from repro.serve.request import (FinishedRequest, GenState,
+                                 QuarantinedRequest, Request, SubmitVerdict)
 from repro.serve.sampling import sample_vec
 from repro.serve.scheduler import (FIFOScheduler, SchedulerConfig,
                                    bucket_len)
@@ -114,7 +155,13 @@ class ForecastEngine:
                  force_window: int = 0, paged: Optional[bool] = None,
                  block_size: int = 0, pool_blocks: int = 0,
                  share_prefixes: Optional[bool] = None,
-                 swap_tier: Optional[bool] = None):
+                 swap_tier: Optional[bool] = None,
+                 clock: Optional[VirtualClock] = None,
+                 step_time_s: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 default_deadline_s: Optional[float] = None,
+                 default_ttft_slo_s: Optional[float] = None,
+                 journal=None):
         if cfg.family not in _SERVABLE:
             raise ValueError(f"family {cfg.family!r} not servable by the "
                              f"engine (supported: {_SERVABLE})")
@@ -172,6 +219,36 @@ class ForecastEngine:
         self.finished: Dict[str, FinishedRequest] = {}
         self.slots: List[Optional[GenState]] = [None] * num_slots
         self._submit_time: Dict[str, float] = {}
+
+        # -- fault tolerance (SLOs / shedding / quarantine / journal) ----
+        def _env_f(name):
+            v = os.environ.get(name, "")
+            return float(v) if v else None
+        self.clock = clock
+        # virtual seconds one engine tick costs on the SLO clock; only the
+        # virtual clock advances by it (wall mode reads perf_counter)
+        self.step_time_s = (step_time_s if step_time_s is not None
+                            else _env_f("REPRO_SERVE_STEP_S") or 0.05)
+        self.max_queue = (max_queue if max_queue is not None
+                          else int(os.environ.get("REPRO_SERVE_MAX_QUEUE",
+                                                  "0")))
+        self._default_deadline_s = (default_deadline_s
+                                    if default_deadline_s is not None
+                                    else _env_f("REPRO_SERVE_DEADLINE_S"))
+        self._default_ttft_slo_s = (default_ttft_slo_s
+                                    if default_ttft_slo_s is not None
+                                    else _env_f("REPRO_SERVE_TTFT_SLO_S"))
+        if journal is None:
+            journal = os.environ.get("REPRO_SERVE_JOURNAL") or None
+        self.journal: Optional[RequestJournal] = (
+            RequestJournal(journal) if isinstance(journal, str) else journal)
+        self.quarantined: Dict[str, QuarantinedRequest] = {}
+        self.shed_log: Dict[str, float] = {}   # id -> retry_after_s hint
+        self._poison: set = set()              # chaos: ids to NaN-inject
+        self._poison_row = np.zeros((num_slots,), bool)
+        # SLO windows anchor at the FIRST submit (requeues/resumes keep
+        # it); a shed request's re-submit starts a fresh window
+        self._slo_submit: Dict[str, float] = {}
         # global-attention rings must hold the whole sequence: dense/moe
         # without a (forced) sliding window, and hybrid, whose attention
         # layers are always global.  Windowed archs wrap by design; pure
@@ -191,7 +268,8 @@ class ForecastEngine:
         self._t = np.zeros((num_slots,), np.int32)
 
         self._step_fn = jax.jit(
-            make_serve_step(cfg, force_window=force_window, sampling=True),
+            make_serve_step(cfg, force_window=force_window, sampling=True,
+                            guard=True),
             donate_argnums=(1,))
 
         def _prefill(params, tokens, true_len):
@@ -203,15 +281,25 @@ class ForecastEngine:
         self._prefill_fn = jax.jit(_prefill)
 
         def _first(logits, key, temp, top_k, top_p, t):
+            # same finite screen the decode step runs: a prompt whose
+            # prefill already went non-finite quarantines at admission
+            lg = logits[:, -1, :]
+            ok = jnp.all(jnp.isfinite(lg))
             keys = jax.random.fold_in(key, t)[None]
-            return sample_vec(keys, logits[:, -1, :], temperature=temp[None],
-                              top_k=top_k[None], top_p=top_p[None])[0]
+            return sample_vec(keys, lg, temperature=temp[None],
+                              top_k=top_k[None], top_p=top_p[None])[0], ok
 
         self._first_fn = jax.jit(_first)
 
     # -- public surface ------------------------------------------------------
 
-    def submit(self, request: Request) -> None:
+    def submit(self, request: Request) -> SubmitVerdict:
+        """Queue a request.  Structural impossibilities (footprint that
+        could never admit) still raise — they are caller bugs; traffic
+        conditions return a verdict instead: ``"quarantined"`` for
+        malformed prompts (audited, never queued) and ``"shed"`` under
+        backpressure (bounded ``max_queue``, cheapest-to-retry
+        newest-first victim, never a request past first token)."""
         budget = self.scheduler.config.max_tokens_in_flight
         if budget > 0 and request.total_tokens > budget:
             # would never admit: run() would spin on it forever
@@ -232,17 +320,228 @@ class ForecastEngine:
                 raise ValueError(
                     f"request {request.id}: needs {need} blocks, pool has "
                     f"{self.pool.pool_blocks}")
+        # malformed-prompt screen: out-of-vocab ids would index garbage
+        # embeddings (or crash a gather) — quarantine before any device
+        # work, audited like a mid-decode poison
+        prompt = np.asarray(request.prompt)
+        if int(prompt.min()) < 0 or int(prompt.max()) >= self.cfg.vocab_size:
+            self._quarantine_submit(request, "malformed_prompt")
+            return SubmitVerdict(request.id, "quarantined",
+                                 reason="malformed_prompt")
+        if request.deadline_s is None:
+            request.deadline_s = self._default_deadline_s
+        if request.ttft_slo_s is None:
+            request.ttft_slo_s = self._default_ttft_slo_s
+        self._seq.setdefault(request.id, len(self._seq))
+        shed_id = None
+        if self.max_queue > 0 and request.resume is None and \
+                self.scheduler.pending >= self.max_queue:
+            victim = self._shed_victim(request)
+            if victim is request:
+                self._record_shed(request, queued=False)
+                return SubmitVerdict(request.id, "shed",
+                                     retry_after_s=self._retry_after_s())
+            self.scheduler.remove(victim)
+            self._record_shed(victim, queued=True)
+            shed_id = victim.id
         if request.resume is None:            # eviction re-queues internally
             obs.instant("req.submit", track=f"req:{request.id}",
                         id=request.id, prompt_len=request.prompt_len,
                         max_new_tokens=request.max_new_tokens)
+            if self.journal is not None:
+                self.journal.log_submit(request)
+            self.metrics.record_submit()
         self._submit_time[request.id] = time.perf_counter()
-        self._seq.setdefault(request.id, len(self._seq))
+        # SLO anchor: resumes (journal replay, evict requeue) keep the
+        # original window; a fresh submit — including a shed request's
+        # retry — starts one
+        res = request.resume or {}
+        if request.resume is None:
+            self._slo_submit[request.id] = self._now()
+        else:
+            self._slo_submit.setdefault(
+                request.id,
+                res.get("slo_submit") if res.get("slo_submit") is not None
+                else self._now())
         self.scheduler.submit(request)
+        return SubmitVerdict(request.id, "ok", shed_id=shed_id)
+
+    def poison(self, request_id: str) -> None:
+        """Chaos hook: NaN-inject this request's logits row on its next
+        decode step (via the compiled step's ``poison`` batch input — no
+        new jit signature).  The guard then quarantines the lane."""
+        self._poison.add(request_id)
 
     @property
     def active_requests(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    # -- SLOs / shedding / quarantine ----------------------------------------
+
+    def _now(self) -> float:
+        """The engine's SLO clock: virtual when one was injected (chaos/
+        CI — deadlines honored with zero ``time.sleep``), wall otherwise.
+        Distinct from the wall-clock TTFT/throughput metrics."""
+        return (self.clock.now() if self.clock is not None
+                else time.perf_counter())
+
+    def _retry_after_s(self) -> float:
+        """Deterministic backoff hint for a shed request: roughly the
+        engine-seconds needed to drain the current queue through the
+        available lanes."""
+        steps = self.scheduler.pending_tokens() / max(len(self.slots), 1)
+        return self.step_time_s * (steps + 1.0)
+
+    def _shed_victim(self, incoming: Request) -> Request:
+        """Cheapest-to-retry, newest-first: fewest total tokens, ties to
+        the latest submit sequence.  Only requests that have produced no
+        token are candidates (queued resumes carry generated tokens and a
+        paid-for TTFT — shedding them wastes finished work and breaks the
+        'never past first token' contract), so the incoming request is
+        always a candidate of last resort."""
+        cands = [incoming] + [q for q in self.scheduler.queued()
+                              if q.resume is None]
+        return min(cands, key=lambda r: (r.total_tokens,
+                                         -self._seq.get(r.id, 0)))
+
+    def _record_shed(self, req: Request, *, queued: bool) -> None:
+        retry = self._retry_after_s()
+        self.metrics.record_shed()
+        self.shed_log[req.id] = retry
+        self._slo_submit.pop(req.id, None)
+        obs.instant("serve.shed", track=f"req:{req.id}", id=req.id,
+                    queued=queued, retry_after_s=retry,
+                    queue_depth=self.scheduler.pending,
+                    total_tokens=req.total_tokens)
+        obs.counter("serve.shed", 1)
+        if queued and self.journal is not None:
+            # the victim's submit is journaled: close it so replay never
+            # resurrects a request we told the client to retry
+            self.journal.log_finish(req.id, "shed")
+
+    def _quarantine_submit(self, req: Request, reason: str) -> None:
+        """Park a request that failed the submit-time screen: audited,
+        never queued, never touching the device."""
+        self.quarantined[req.id] = QuarantinedRequest(
+            req.id, reason, self.step_count, req.prompt_len, 0)
+        self.metrics.record_quarantine(reason)
+        self._audit_quarantine(req, reason, slot=-1, generated=0)
+
+    def _quarantine_lane(self, st: GenState, reason: str) -> None:
+        """Quarantine ONE resident lane mid-decode: no token emitted, the
+        lane's batch row zeroed and its blocks released (refcounts and the
+        partition invariant preserved — neighbours never notice), audit +
+        flight-recorder repro bundle dumped."""
+        req, slot = st.request, st.slot
+        res = req.resume or {}
+        self.quarantined[req.id] = QuarantinedRequest(
+            req.id, reason, self.step_count,
+            int(res.get("prompt_len", req.prompt_len)), len(st.generated))
+        self.metrics.record_quarantine(reason)
+        self._clear_lane_rows(slot)
+        self._audit_quarantine(req, reason, slot=slot,
+                               generated=len(st.generated))
+
+    def _audit_quarantine(self, req: Request, reason: str, *, slot: int,
+                          generated: int) -> None:
+        self._poison.discard(req.id)
+        self._slo_submit.pop(req.id, None)
+        sp = req.sampling
+        # the instant doubles as the repro bundle: enough of the request
+        # (prompt head, sampling knobs, progress) rides into the flight
+        # dump to replay the poisoned step offline
+        obs.instant("serve.quarantine", track=f"req:{req.id}", id=req.id,
+                    reason=reason, slot=slot, step=self.step_count,
+                    prompt_len=req.prompt_len, generated=generated,
+                    prompt_head=[int(t) for t in
+                                 np.asarray(req.prompt)[:16]],
+                    seed=sp.seed, temperature=sp.temperature)
+        obs.counter(f"serve.quarantine.{reason}", 1)
+        if self.journal is not None:
+            self.journal.log_finish(req.id, f"quarantined:{reason}")
+        obs.flight_maybe_dump("engine.quarantine")
+
+    def _clear_lane_rows(self, slot: int) -> None:
+        """Full lane reclamation: GenState gone, every batch row zeroed,
+        blocks back to the pool (CoW refcounts handled by release)."""
+        self.slots[slot] = None
+        self._pos[slot] = -1
+        self._tok[slot, 0] = 0
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+        self._topp[slot] = 0.0
+        self._key[slot] = 0
+        self._t[slot] = 0
+        self.pool.release(slot)
+
+    def _expiry(self, req: Request, started: bool,
+                now: float) -> Optional[str]:
+        """Which SLO (if any) ``req`` has blown at ``now``.  Windows are
+        measured from the FIRST submit; a request finishing exactly at
+        its deadline is on time (strict >)."""
+        t0 = self._slo_submit.get(req.id)
+        if t0 is None:
+            return None
+        if req.deadline_s is not None and now - t0 > req.deadline_s:
+            return "deadline"
+        if req.ttft_slo_s is not None and not started \
+                and now - t0 > req.ttft_slo_s:
+            return "ttft_slo"
+        return None
+
+    def _slo_sweep(self) -> None:
+        """Top of every tick: cancel expired queued and resident requests
+        BEFORE admission, so the blocks and lanes a cancellation frees are
+        grantable in the same tick (the grant pass hands them out in
+        submit order — cancellation never reorders FIFO resumption)."""
+        if not self._slo_submit:
+            return
+        now = self._now()
+
+        def q_kind(req: Request) -> Optional[str]:
+            started = bool((req.resume or {}).get("generated"))
+            return self._expiry(req, started, now)
+
+        for req in self.scheduler.cancel_where(
+                lambda r: q_kind(r) is not None):
+            self._cancel_queued(req, q_kind(req), now)
+        for st in [s for s in self.slots if s is not None]:
+            kind = self._expiry(st.request, bool(st.generated), now)
+            if kind is not None:
+                self._retire(st, kind)
+
+    def _cancel_queued(self, req: Request, kind: str, now: float) -> None:
+        """Deadline-cancel a request that is not resident: drop its swap
+        handle (host tier reclamation), finish it with whatever it
+        generated in prior residencies, audit the miss."""
+        res = req.resume or {}
+        if res.get("swap") in self.swap:
+            self.swap.pop(res["swap"])
+        gen = [int(t) for t in res.get("generated", [])]
+        t0 = self._slo_submit.pop(req.id, None)
+        self.metrics.record_deadline_miss(ttft=kind == "ttft_slo")
+        first = res.get("first_token_time") or 0.0
+        submit_t = (res.get("submitted")
+                    or self._submit_time.get(req.id, now))
+        ttft = (first - submit_t) if first else None
+        self.metrics.record_finish(ttft)
+        track = f"req:{req.id}"
+        obs.instant("serve.deadline_miss", track=track, id=req.id,
+                    kind=kind, queued=True, generated=len(gen),
+                    waited_s=now - t0 if t0 is not None else 0.0)
+        obs.counter(f"serve.deadline_miss.{kind}", 1)
+        wall = time.perf_counter()
+        obs.add_span("req.lifecycle", submit_t, wall, track=track,
+                     id=req.id, reason=kind, tokens=len(gen),
+                     ttft_s=ttft or 0.0)
+        obs.instant("req.retire", track=track, id=req.id, reason=kind)
+        if self.journal is not None:
+            self.journal.log_finish(req.id, kind)
+        self.finished[req.id] = FinishedRequest(
+            id=req.id, tokens=np.asarray(gen, np.int32),
+            prompt_len=int(res.get("prompt_len", req.prompt_len)),
+            admitted_step=-1, finished_step=self.step_count,
+            ttft_s=ttft or 0.0, reason=kind)
 
     @property
     def tokens_in_flight(self) -> int:
@@ -255,8 +554,12 @@ class ForecastEngine:
         return self._step_fn._cache_size()
 
     def step(self) -> None:
-        """One engine tick: admit what fits, grow/park paged lanes, then
-        one batched decode."""
+        """One engine tick: sweep SLOs (cancellations free capacity for
+        this very tick), admit what fits, grow/park paged lanes, then one
+        batched decode.  Under a virtual clock the tick ends by advancing
+        ``step_time_s`` virtual seconds; the journal (if any) commits its
+        buffered token records at the same boundary."""
+        self._slo_sweep()
         free_blocks = self.pool.free_blocks if self.paged else -1
         blocks_needed = self._admit_blocks if self.paged else None
         for req in self.scheduler.admit(
@@ -278,6 +581,10 @@ class ForecastEngine:
             self._grant_pass()
         self._decode()
         self.step_count += 1
+        if self.journal is not None:
+            self.journal.commit()
+        if self.clock is not None:
+            self.clock.advance(self.step_time_s)
         # drain swap-outs to host np arrays AFTER the decode dispatched —
         # the device gather overlaps the step instead of blocking it
         while self._swap_pending:
@@ -393,11 +700,6 @@ class ForecastEngine:
                     self.pool.insert(cache1, slot, skip_blocks=len(shared))
                 else:
                     self.pool.insert(cache1, slot)
-            if self.share_prefixes and req.resume is None:
-                # index this prompt for future sharers (resumes carry
-                # generated continuations — not reusable prompts)
-                self.pool.register_prefix(
-                    slot, req.prompt, np.asarray(logits[0, -1]))
             self.metrics.record_admit(P)
 
         prior: List[int] = list(res.get("generated", []))
@@ -405,12 +707,30 @@ class ForecastEngine:
         base_key = np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)
         # sample counter continues across eviction/recompute: token i of the
         # ORIGINAL request is always drawn from fold_in(key, i)
-        tok0 = int(self._first_fn(
+        tok0, ok0 = self._first_fn(
             logits, jnp.asarray(base_key),
             jnp.asarray(sp.temperature, jnp.float32),
             jnp.asarray(sp.top_k, jnp.int32),
             jnp.asarray(sp.top_p, jnp.float32),
-            jnp.asarray(len(prior), jnp.int32)))
+            jnp.asarray(len(prior), jnp.int32))
+        if not bool(ok0):
+            # prefill already went non-finite: quarantine at admission,
+            # BEFORE the prompt could be indexed as a prefix donor (a
+            # poisoned chain would hand NaN logits to every sharer)
+            self.quarantined[req.id] = QuarantinedRequest(
+                req.id, "nonfinite_logits", self.step_count,
+                int(res.get("prompt_len", req.prompt_len)), len(prior))
+            self.metrics.record_quarantine("nonfinite_logits")
+            self.pool.release(slot)
+            self._audit_quarantine(req, "nonfinite_logits", slot=slot,
+                                   generated=len(prior))
+            return
+        tok0 = int(tok0)
+        if not full_hit and self.share_prefixes and req.resume is None:
+            # index this prompt for future sharers (resumes carry
+            # generated continuations — not reusable prompts)
+            self.pool.register_prefix(
+                slot, req.prompt, np.asarray(logits[0, -1]))
 
         now = time.perf_counter()
         st = GenState(request=req, slot=slot, pos=P, last_token=tok0,
@@ -419,6 +739,8 @@ class ForecastEngine:
         done = st.remaining == 1 or tok0 == req.eos_id
         first_of_original = not prior          # st.emit appends into `prior`
         st.emit(tok0, is_last=done, now=now)
+        if self.journal is not None:
+            self.journal.log_token(req.id, tok0)
         if first_of_original:
             obs.instant("req.first_token", track=track, id=req.id)
         if done:
@@ -454,9 +776,15 @@ class ForecastEngine:
         while True:
             fresh: List[int] = []
             parked: List[int] = []
-            for i, st in enumerate(self.slots):
-                if st is None:
-                    continue
+            # walk lanes in original-submit order, NOT slot-index order:
+            # blocks freed mid-tick (an SLO cancellation, a retire) must
+            # unpark waiting lanes FIFO — the oldest parked request gets
+            # the first grant, whatever slot it happens to occupy
+            order = sorted(
+                (i for i, s in enumerate(self.slots) if s is not None),
+                key=lambda i: self._seq.get(self.slots[i].request.id, 0))
+            for i in order:
+                st = self.slots[i]
                 lb = (st.pos % self.pool.ring_len) // self.pool.block_size
                 pb = int(self.pool.table[i, lb])
                 if pb >= 0:
@@ -537,12 +865,15 @@ class ForecastEngine:
             max_new_tokens=req.max_new_tokens,
             sampling=req.sampling, eos_id=req.eos_id, arrival_step=0,
             stream=req.stream,
+            deadline_s=req.deadline_s, ttft_slo_s=req.ttft_slo_s,
             resume={"generated": [int(t) for t in done],
                     "prompt_len": orig_prompt_len,
                     "first_token_time": res.get("first_token_time")
                     or st.first_token_time,
                     "submitted": res.get("submitted")
-                    or self._submit_time.get(req.id)})
+                    or self._submit_time.get(req.id),
+                    # SLO window keeps ticking across displacement
+                    "slo_submit": self._slo_submit.get(req.id)})
 
     def _clear_lane(self, slot: int) -> None:
         self.slots[slot] = None
@@ -576,7 +907,7 @@ class ForecastEngine:
         resumed = self._resume_request(st)
         resumed.resume["swap"] = req.id
         lane = self.pool.gather_lane(slot)     # BEFORE release zeroes the row
-        blocks = int((self.pool.table[slot] >= 0).sum())
+        blocks = self.pool.lane_blocks(slot)
         nbytes = blocks * self.pool.block_bytes
         self.swap[req.id] = {"cache": lane, "pos": st.pos, "blocks": blocks}
         self._swap_pending.append(req.id)
@@ -629,6 +960,11 @@ class ForecastEngine:
                   if s is not None and self._pos[i] >= 0]
         if not active:
             return
+        # chaos NaN injector: the poison row is ALWAYS in the batch (all
+        # False when disarmed) so arming it never changes the signature
+        for i, s in enumerate(self.slots):
+            self._poison_row[i] = (bool(self._poison) and s is not None
+                                   and s.request.id in self._poison)
         batch = {
             "token": jnp.asarray(self._tok),
             "pos": jnp.asarray(self._pos),
@@ -637,6 +973,7 @@ class ForecastEngine:
             "top_p": jnp.asarray(self._topp),
             "key": jnp.asarray(self._key),
             "t": jnp.asarray(self._t),
+            "poison": jnp.asarray(self._poison_row),
         }
         if self.paged:
             batch["block_tbl"] = jnp.asarray(self.pool.table)
@@ -644,9 +981,10 @@ class ForecastEngine:
         t0 = time.perf_counter()
         with obs.span("engine.decode_step", device=True,
                       step=self.step_count, active=len(active)):
-            tok, self.pool.cache = self._step_fn(self.params,
-                                                 self.pool.cache, batch)
+            tok, ok, self.pool.cache = self._step_fn(self.params,
+                                                     self.pool.cache, batch)
             tok_np = np.asarray(tok)          # blocks until the step lands
+            ok_np = np.asarray(ok)
         self.metrics.record_decode_step(
             len(active), len(active), time.perf_counter() - t0,
             in_flight=self.active_requests,
@@ -661,9 +999,18 @@ class ForecastEngine:
         now = time.perf_counter()
         for i in active:
             st = self.slots[i]
+            if not bool(ok_np[i]):
+                # this lane's logits slice went non-finite (organic or
+                # injected): no token emitted, lane quarantined alone —
+                # the scatter already wrote its cache row, but the blocks
+                # are released with the lane, so nothing leaks
+                self._quarantine_lane(st, "nonfinite_logits")
+                continue
             t = int(tok_np[i, 0])
             done = st.remaining == 1 or t == st.request.eos_id
             st.emit(t, is_last=done, now=now)
+            if self.journal is not None:
+                self.journal.log_token(st.request.id, t)
             st.pos += 1
             st.steps_done += 1
             if done:
@@ -687,6 +1034,19 @@ class ForecastEngine:
         self._t[slot] = 0
         self.pool.release(slot)
         res = st.request.resume or {}
+        track = f"req:{st.request.id}"
+        slo_t0 = self._slo_submit.pop(st.request.id, None)
+        self._poison.discard(st.request.id)
+        if reason in ("deadline", "ttft_slo"):
+            # resident cancel: mid-decode, partial tokens kept, lane and
+            # blocks just reclaimed above — audit the miss
+            self.metrics.record_deadline_miss(ttft=reason == "ttft_slo")
+            obs.instant("serve.deadline_miss", track=track,
+                        id=st.request.id, kind=reason, queued=False,
+                        generated=len(st.generated),
+                        waited_s=(self._now() - slo_t0
+                                  if slo_t0 is not None else 0.0))
+            obs.counter(f"serve.deadline_miss.{reason}", 1)
         first_tok = res.get("first_token_time") or st.first_token_time
         # resumes carry the ORIGINAL submit time: TTFT measures the user's
         # wait, not the latest recompute/swap-in residency
@@ -696,7 +1056,6 @@ class ForecastEngine:
         ttft = first_tok - submit_t
         self.metrics.record_finish(ttft)
         now = time.perf_counter()
-        track = f"req:{st.request.id}"
         obs.add_span("req.decode", first_tok, now, track=track,
                      id=st.request.id, tokens=len(st.generated))
         # exactly ONE lifecycle span per finished request (never re-emitted
@@ -707,6 +1066,8 @@ class ForecastEngine:
                      tokens=len(st.generated), ttft_s=ttft)
         obs.instant("req.retire", track=track, id=st.request.id,
                     reason=reason)
+        if self.journal is not None:
+            self.journal.log_finish(st.request.id, reason)
         self.finished[st.request.id] = FinishedRequest(
             id=st.request.id,
             tokens=np.asarray(st.generated, np.int32),

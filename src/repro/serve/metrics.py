@@ -53,6 +53,13 @@ Summary fields
                           (free−1) from ``BlockAllocator``; 0 contiguous,
                           1 fully shredded)
 ``peak_fragmentation``    worst per-step fragmentation observed
+``requests_submitted``    submits the engine accepted (verdict "ok")
+``shed``                  submits rejected by backpressure (bounded queue)
+``deadline_misses``       SLO cancellations (whole-request OR first-token)
+``ttft_slo_misses``       subset of the above where TTFT was the miss
+``quarantined``           poisoned/malformed requests parked (total; the
+                          per-reason split lives on ``quarantined`` dict)
+``deadline_miss_rate``    deadline_misses / requests_submitted
 """
 
 from __future__ import annotations
@@ -97,6 +104,12 @@ class EngineMetrics:
     itl_hist: Histogram = dataclasses.field(default_factory=Histogram)
     first_step_s: float = 0.0                 # jit-compile-laden first step
     steady_decode_s: float = 0.0              # decode wall time past step 1
+    # fault-tolerance accounting (requests, not steps):
+    requests_submitted: int = 0               # accepted submits (verdict ok)
+    requests_shed: int = 0                    # backpressure rejections
+    deadline_misses: int = 0                  # SLO cancellations, either kind
+    ttft_slo_misses: int = 0                  # subset: first-token SLO
+    quarantined: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def record_admit(self, prompt_len: int) -> None:
         self.requests_admitted += 1
@@ -147,11 +160,31 @@ class EngineMetrics:
         self.swap_ins += 1
         self.swap_in_bytes += nbytes
 
-    def record_finish(self, ttft_s: float) -> None:
+    def record_finish(self, ttft_s: float = None) -> None:
+        """``ttft_s=None`` counts the finish without a TTFT sample — an
+        SLO-cancelled request that never produced a first token has no
+        TTFT to report (recording the deadline value instead would poison
+        the percentiles)."""
         self.requests_finished += 1
-        self.ttft_s.append(ttft_s)
-        self.ttft_hist.add(ttft_s)
+        if ttft_s is not None:
+            self.ttft_s.append(ttft_s)
+            self.ttft_hist.add(ttft_s)
         self.last_event_at = time.perf_counter()
+
+    def record_submit(self) -> None:
+        self.requests_submitted += 1
+
+    def record_shed(self) -> None:
+        self.requests_shed += 1
+
+    def record_deadline_miss(self, *, ttft: bool = False) -> None:
+        """One SLO cancellation; ``ttft=True`` when the first-token SLO
+        (rather than the whole-request deadline) was the one missed."""
+        self.deadline_misses += 1
+        self.ttft_slo_misses += bool(ttft)
+
+    def record_quarantine(self, reason: str) -> None:
+        self.quarantined[reason] = self.quarantined.get(reason, 0) + 1
 
     def summary(self) -> Dict[str, float]:
         # span to the LAST recorded event, not the last request finish:
@@ -209,4 +242,15 @@ class EngineMetrics:
             "mean_fragmentation": (self.frag_sum / self.decode_steps
                                    if self.decode_steps else 0.0),
             "peak_fragmentation": self.peak_fragmentation,
+            "requests_submitted": self.requests_submitted,
+            "shed": self.requests_shed,
+            "deadline_misses": self.deadline_misses,
+            "ttft_slo_misses": self.ttft_slo_misses,
+            "quarantined": int(sum(self.quarantined.values())),
+            # rate over accepted submits: either-SLO cancellations per
+            # request the engine agreed to serve (sheds excluded — they
+            # never entered an SLO window)
+            "deadline_miss_rate": (
+                self.deadline_misses / self.requests_submitted
+                if self.requests_submitted else 0.0),
         }

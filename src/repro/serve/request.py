@@ -40,6 +40,11 @@ class Request:
     eos_id: Optional[int] = None              # optional stop token
     arrival_step: int = 0                     # earliest engine step admitting
     stream: Optional[StreamFn] = None         # per-token streaming callback
+    # SLOs, measured on the engine's clock from the request's FIRST submit
+    # (shed-and-retried requests restart their window; evict/requeue and
+    # journal-replay resumes keep the original):
+    deadline_s: Optional[float] = None        # whole-request completion SLO
+    ttft_slo_s: Optional[float] = None        # first-token SLO
     # engine-internal (eviction/recompute): a request re-queued mid-decode
     # carries its already-generated tokens in the prompt; ``resume`` records
     # {"generated": [...], "prompt_len": orig} so emitted output, sampling
@@ -53,6 +58,11 @@ class Request:
                              f"1-D token sequence")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.id}: max_new_tokens must be >= 1")
+        for name in ("deadline_s", "ttft_slo_s"):
+            v = getattr(self, name)
+            if v is not None and not (float(v) > 0.0):
+                raise ValueError(
+                    f"request {self.id}: {name} must be > 0 when set")
 
     @property
     def prompt_len(self) -> int:
@@ -97,11 +107,48 @@ class GenState:
 
 @dataclasses.dataclass
 class FinishedRequest:
-    """Engine output record for one retired request."""
+    """Engine output record for one retired request.  ``reason`` is
+    ``"length"``/``"eos"`` for clean completions, ``"deadline"``/
+    ``"ttft_slo"`` for SLO cancellations (``tokens`` then holds whatever
+    was generated before the miss)."""
     id: str
     tokens: np.ndarray                        # (n_generated,) int32
     prompt_len: int
     admitted_step: int
     finished_step: int
     ttft_s: float                             # admission -> first token
-    reason: str                               # "length" | "eos"
+    reason: str                               # "length"|"eos"|"deadline"|"ttft_slo"
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmitVerdict:
+    """What ``ForecastEngine.submit`` tells the caller happened.
+
+    ``verdict``:
+      * ``"ok"``          — queued (``shed_id`` names a *different*, older
+        queued request this admit displaced, if any);
+      * ``"shed"``        — the submitted request itself was shed by
+        backpressure; retry after ``retry_after_s`` engine seconds;
+      * ``"quarantined"`` — rejected at submit (malformed prompt); never
+        queued, audited in ``engine.quarantined``.
+    """
+    id: str
+    verdict: str                              # "ok" | "shed" | "quarantined"
+    retry_after_s: float = 0.0                # shed: suggested resubmit delay
+    shed_id: Optional[str] = None             # ok: queued victim it displaced
+    reason: Optional[str] = None              # quarantined: audit reason
+
+    @property
+    def ok(self) -> bool:
+        return self.verdict == "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuarantinedRequest:
+    """Audit record for a poisoned/malformed request parked by the
+    engine: why, when, and how far decode got before the screen fired."""
+    id: str
+    reason: str                    # "malformed_prompt" | "nonfinite_logits"
+    step: int                      # engine step the quarantine fired on
+    prompt_len: int
+    generated: int                 # tokens emitted before quarantine

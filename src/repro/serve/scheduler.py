@@ -75,6 +75,40 @@ class FIFOScheduler:
     def pending(self) -> int:
         return len(self._queue)
 
+    def pending_tokens(self) -> int:
+        """Worst-case token footprint queued (the engine's retry_after
+        estimator divides this by the slot count)."""
+        return sum(r.total_tokens for r in self._queue)
+
+    def queued(self) -> List[Request]:
+        """Snapshot of the queue, head first (read-only view for the
+        engine's shed-victim selection; mutation goes through
+        :meth:`remove` / :meth:`cancel_where` so FIFO order is kept)."""
+        return list(self._queue)
+
+    def remove(self, request: Request) -> bool:
+        """Drop one queued request (load shedding); the relative order of
+        everything else is untouched.  Returns False if it already left
+        the queue (admitted this tick)."""
+        try:
+            self._queue.remove(request)
+            return True
+        except ValueError:
+            return False
+
+    def cancel_where(self, pred: Callable[[Request], bool]
+                     ) -> List[Request]:
+        """Remove every queued request matching ``pred`` (deadline/TTFT
+        sweeps), preserving the survivors' FIFO order.  Returns the
+        removed requests in queue order."""
+        flags = [bool(pred(r)) for r in self._queue]
+        removed = [r for r, f in zip(self._queue, flags) if f]
+        if removed:
+            kept = [r for r, f in zip(self._queue, flags) if not f]
+            self._queue.clear()
+            self._queue.extend(kept)
+        return removed
+
     def admit(self, *, now_step: int, free_slots: int,
               tokens_in_flight: int, free_blocks: int = -1,
               blocks_needed: Optional[Callable[[Request], int]] = None

@@ -34,7 +34,7 @@ survives client churn.
     quantization error is never lost.
   * Late uploads land in a server-side ``StalenessBuffer`` and apply at
     the cluster's next window down-weighted by ``staleness_decay**s``;
-    beyond ``staleness_limit`` rounds they are rejected — bounded
+    at or beyond ``staleness_limit`` rounds they are rejected — bounded
     staleness, so the round clock is set by the deadline, not by the
     slowest client.
   * Every upload is validated before aggregation (``repro.fault.guard``):
@@ -532,12 +532,19 @@ def federated_fit(cfg: ModelConfig, client_data, *, rounds: int = 5,
                     ledger.record(r, c, e.client, participated=False,
                                   wire_bytes=client_wire_bytes,
                                   reason="stale", staleness_rejected=True)
+                # the apply path shares drain's boundary predicate: a
+                # drained entry at staleness >= limit never reaches
+                # apply_deltas, and the ledgered staleness is the same
+                # floored value drain decayed by
                 cohort = (
                     [(a["client"], a["payload"], a["weight"], a["loss"],
                       a["virtual_s"], a["fit_t0"], a["ef"], 0)
                      for a in ontime] +
                     [(e.client, e.delta, w, e.loss, 0.0, None, 0.0,
-                      r - e.origin_round) for e, w in drained])
+                      buffer.staleness_of(r, e.origin_round))
+                     for e, w in drained
+                     if not buffer.is_stale(
+                         buffer.staleness_of(r, e.origin_round))])
                 n_uploads = len(cohort) + len(stale_rejects)
                 verdicts = validate_deltas([p for _, p, *_ in cohort],
                                            byz_k=byzantine_norm_k)

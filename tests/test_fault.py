@@ -122,7 +122,7 @@ def test_staleness_buffer_unit():
     apply, reject = buf.drain(0, 1, window_end=2.0)
     assert [(e.client, w) for e, w in apply] == [(1, 2.0)]  # 4.0 * 0.5**1
     assert not reject and len(buf) == 2
-    apply, reject = buf.drain(0, 5, window_end=100.0)  # staleness 5 > 2
+    apply, reject = buf.drain(0, 5, window_end=100.0)  # staleness 5 >= 2
     assert not apply and [(e.client, s) for e, s in reject] == [(2, 5)]
     with pytest.raises(ValueError):
         buf.add(BufferedDelta(9, 0, 0, ready_at=float("inf"), weight=1.0,
@@ -177,11 +177,13 @@ def test_deadline_buffering_then_staleness_apply():
                      base_fit_s=0.5)
     res = federated_fit(cfg, data, rounds=4, batch_size=4,
                         key=jax.random.PRNGKey(0), fault_plan=plan,
-                        deadline_s=1.0, staleness_limit=2)
+                        deadline_s=1.0, staleness_limit=3)
     led = res.fleet
     # round 0: miss (arrival 3.0 > window end 1.0) -> buffered
     assert ("deadline", 0) in _reasons(led, 2)
     # drained at the first window whose end >= 3.0 (round 2), staleness 2
+    # (strictly inside limit 3 — staleness == limit rejects, see the
+    # boundary test below)
     drained = [r for r in led.records
                if r.client == 2 and r.participated and r.extra
                and "buffered_staleness" in r.extra]
@@ -199,7 +201,40 @@ def test_deadline_buffering_then_stale_reject():
                         deadline_s=1.0, staleness_limit=1)
     led = res.fleet
     assert ("deadline", 0) in _reasons(led, 2)
-    assert ("stale", 2) in _reasons(led, 2)     # staleness 2 > limit 1
+    assert ("stale", 2) in _reasons(led, 2)     # staleness 2 >= limit 1
+    assert not any(r.participated and r.extra
+                   and "buffered_staleness" in r.extra
+                   for r in led.records if r.client == 2)
+
+
+def test_staleness_limit_boundary_rejects_on_both_paths():
+    """staleness == staleness_limit must reject on BOTH paths — the
+    buffer's own drain predicate and the trainer's apply filter — so a
+    delta never applies on one path that the other would have rejected.
+    Historically drain used ``>`` while apply used ``>=``; the shared
+    ``is_stale`` predicate pins the exclusive boundary."""
+    # path 1: StalenessBuffer.drain at the exact boundary
+    buf = StalenessBuffer(limit=2, decay=0.5)
+    d = {"w": np.ones(2, np.float32)}
+    buf.add(BufferedDelta(7, 0, 0, ready_at=1.0, weight=1.0, loss=0.1,
+                          delta=d))
+    assert buf.is_stale(2) and not buf.is_stale(1)
+    assert buf.staleness_of(2, 0) == 2 == buf.staleness_of(1, 0) + 1
+    apply, reject = buf.drain(0, 2, window_end=5.0)   # staleness exactly 2
+    assert not apply and [(e.client, s) for e, s in reject] == [(7, 2)]
+    # path 2: the trainer's cohort filter — same delay scenario as the
+    # apply test above but with limit == achieved staleness (2): the
+    # buffered delta must surface as a "stale" rejection, never apply
+    cfg, data = _mini(6, clusters=1)
+    plan = FaultPlan({2: [Fault("delay", delay_s=2.5,
+                                rounds=frozenset({0}))]},
+                     base_fit_s=0.5)
+    res = federated_fit(cfg, data, rounds=4, batch_size=4,
+                        key=jax.random.PRNGKey(0), fault_plan=plan,
+                        deadline_s=1.0, staleness_limit=2)
+    led = res.fleet
+    assert ("deadline", 0) in _reasons(led, 2)
+    assert ("stale", 2) in _reasons(led, 2)     # staleness 2 == limit 2
     assert not any(r.participated and r.extra
                    and "buffered_staleness" in r.extra
                    for r in led.records if r.client == 2)
